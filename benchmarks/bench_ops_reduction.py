@@ -1,0 +1,37 @@
+"""Paper Fig 8: multiplication/addition/iteration reduction from the
+strength-reduced MMMs, for JEDI-net-30p and -50p."""
+
+from __future__ import annotations
+
+from repro.core.adjacency import mmm_op_counts
+from benchmarks.common import row
+
+
+def run():
+    rows = []
+    for name, n_o in (("30p", 30), ("50p", 50)):
+        c = mmm_op_counts(n_o, 16, 8)
+        rows.append(row(
+            f"fig8_mmm12_{name}", 0.0,
+            f"mults {c['mmm12_baseline_mults']}->{c['mmm12_sr_mults']}; "
+            f"adds {c['mmm12_baseline_adds']}->{c['mmm12_sr_adds']}"))
+        frac = c["mmm3_sr_adds"] / c["mmm3_baseline_adds"]
+        rows.append(row(
+            f"fig8_mmm3_{name}", 0.0,
+            f"mults {c['mmm3_baseline_mults']}->0; adds "
+            f"{c['mmm3_baseline_adds']}->{c['mmm3_sr_adds']} "
+            f"({frac * 100:.1f}% remain; paper 30p: 6960 = 3.3%)"))
+        it = c["iterations_sr"] / c["iterations_baseline"]
+        rows.append(row(
+            f"fig8_iters_{name}", 0.0,
+            f"iterations {c['iterations_baseline']}->{c['iterations_sr']} "
+            f"({(1 - it) * 100:.1f}% reduction; paper: 96.7%/98%)"))
+    # verify the 30p headline numbers exactly
+    c = mmm_op_counts(30, 16, 8)
+    assert c["mmm3_sr_adds"] == 6960
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

@@ -1,0 +1,75 @@
+"""Roofline summary: aggregates the dry-run JSON records into the
+per-(arch x shape x mesh) table for EXPERIMENTS.md §Roofline.
+
+Also computes MODEL_FLOPS / HLO_FLOPs (useful-compute ratio) for the LM
+train cells.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def model_flops_for(arch_id: str, shape_name: str, kind: str):
+    """Analytic MODEL_FLOPS for LM cells: 6*N_active*D (train)."""
+    from repro.configs.registry import get_arch
+    from repro.launch.roofline import model_flops_lm
+    arch = get_arch(arch_id)
+    if arch.family != "lm":
+        return None
+    shape = arch.shapes[shape_name]
+    if kind == "train":
+        n_tok = shape.dim("global_batch") * shape.dim("seq_len")
+        return model_flops_lm(arch.model, n_tok, train=True)
+    if shape.kind == "prefill":
+        n_tok = shape.dim("global_batch") * shape.dim("seq_len")
+        return model_flops_lm(arch.model, n_tok, train=False)
+    if shape.kind == "decode":
+        return model_flops_lm(arch.model, shape.dim("global_batch"),
+                              train=False)
+    return None
+
+
+def load_records():
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*", "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run():
+    rows = []
+    recs = load_records()
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    rows.append(row("dryrun_cells", 0.0,
+                    f"{n_ok}/{len(recs)} (arch x shape x mesh) compiled"))
+    for r in recs:
+        if r["status"] != "ok":
+            rows.append(row(f"roofline_{r['mesh']}_{r['arch']}__"
+                            f"{r['shape']}", 0.0, f"FAILED {r['error']}"))
+            continue
+        rf = r["roofline"]
+        mf = model_flops_for(r["arch"], r["shape"], r.get("kind", ""))
+        useful = ""
+        if mf and rf["flops_per_chip"]:
+            ratio = (mf / rf["chips"]) / rf["flops_per_chip"]
+            useful = f"; useful-compute {ratio:.2f}"
+        rows.append(row(
+            f"roofline_{r['mesh']}_{r['arch']}__{r['shape']}",
+            rf["step_s"] * 1e6,
+            f"bound={rf['bound']} c={rf['compute_s']*1e3:.2f}ms "
+            f"m={rf['memory_s']*1e3:.2f}ms x={rf['collective_s']*1e3:.2f}ms"
+            f"{useful}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

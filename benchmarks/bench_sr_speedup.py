@@ -1,0 +1,33 @@
+"""Paper Fig 9: latency reduction from strength-reduced MMMs.
+
+Measured on this container's CPU backend (the *relative* effect of
+removing the dense adjacency MMMs is hardware-independent; absolute TPU
+numbers come from the roofline in EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import interaction_net as inet
+from benchmarks.common import row, time_fn
+
+
+def run():
+    rows = []
+    for name, n_o in (("30p", 30), ("50p", 50)):
+        cfg = inet.JediNetConfig(n_objects=n_o, n_features=16)
+        params = inet.init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (256, n_o, 16))
+        dense = jax.jit(lambda p, x_: inet.forward_dense(p, cfg, x_))
+        sr = jax.jit(lambda p, x_: inet.forward_sr(p, cfg, x_))
+        t_dense = time_fn(dense, params, x)
+        t_sr = time_fn(sr, params, x)
+        rows.append(row(f"fig9_dense_{name}", t_dense, "batch=256"))
+        rows.append(row(f"fig9_sr_{name}", t_sr,
+                        f"speedup {t_dense / t_sr:.2f}x over dense MMMs"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

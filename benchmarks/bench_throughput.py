@@ -1,0 +1,50 @@
+"""Paper Table 3: CPU/GPU/FPGA platform comparison, extended with (a) this
+container's measured CPU throughput through our implementation and (b) the
+TPU-v5e roofline projection from the codesign TPUModel.
+
+KGPS = kilo graph-events (jets) per second at batch 1000 (paper's batch).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import codesign, interaction_net as inet
+from benchmarks.common import row, time_fn
+
+# Table 3 reference rows (paper)
+PAPER = [
+    ("xeon6154_50p", 1.69), ("xeon6154_30p", 17.6),
+    ("rtx2080ti_50p", 59.52), ("rtx2080ti_30p", 263.2),
+    ("fpga_u250_50p", 1333.0), ("fpga_u250_30p", 1333.0),
+]
+
+
+def run():
+    rows = [row(f"table3_paper_{n}", 0.0, f"{k} KGPS (paper)")
+            for n, k in PAPER]
+    for name, n_o in (("30p", 30), ("50p", 50)):
+        cfg = inet.JediNetConfig(n_objects=n_o, n_features=16)
+        params = inet.init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1000, n_o, 16))
+        f = jax.jit(lambda p, x_: inet.forward_sr(p, cfg, x_))
+        us = time_fn(f, params, x)
+        kgps = 1000 / (us / 1e6) / 1e3
+        rows.append(row(f"table3_thiscpu_{name}", us,
+                        f"{kgps:.1f} KGPS measured (this container, SR "
+                        "path, batch=1000)"))
+        # TPU roofline projection (single v5e chip, fused):
+        # 1000 jets per step of step_us microseconds.
+        tpu = codesign.TPUModel.evaluate(
+            codesign.TPUDesignPoint(cfg=cfg, batch=1000), fused=True)
+        kgps_tpu = 1000 / (tpu["step_us"] * 1e-6) / 1e3
+        rows.append(row(f"table3_tpu_roofline_{name}", tpu["step_us"],
+                        f"{kgps_tpu:.0f} KGPS roofline-projected "
+                        f"(1x v5e chip, {tpu['bound']}-bound; paper FPGA: "
+                        "1333 KGPS)"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig8,table2,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import print_rows
+
+BENCHES = {
+    "fig8_ops_reduction": "benchmarks.bench_ops_reduction",
+    "table2_latency_model": "benchmarks.bench_latency_model",
+    "fig9_sr_speedup": "benchmarks.bench_sr_speedup",
+    "fig10_fusion": "benchmarks.bench_fusion",
+    "fig11_codesign": "benchmarks.bench_codesign",
+    "table3_throughput": "benchmarks.bench_throughput",
+    "roofline_summary": "benchmarks.bench_roofline_summary",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark keys")
+    args = ap.parse_args()
+    keys = args.only.split(",") if args.only else list(BENCHES)
+
+    import importlib
+    all_rows = []
+    failed = []
+    for k in keys:
+        try:
+            mod = importlib.import_module(BENCHES[k])
+            all_rows.extend(mod.run())
+        except Exception as e:  # noqa: BLE001
+            failed.append(k)
+            traceback.print_exc()
+            all_rows.append({"name": f"{k}_FAILED", "us_per_call": 0.0,
+                             "derived": str(e)})
+    print_rows(all_rows)
+    if failed:
+        print(f"\nFAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Continuous-batching LM serving demo (the decode_32k cell's code path
+at CPU scale).
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Runs the h2o-danube arch (reduced dims, same code) through the serving
+driver: request queue -> prefill -> batched decode with slot recycling.
+"""
+
+from repro.launch import serve
+
+
+def main():
+    serve.main([
+        "--arch", "h2o-danube-1.8b",
+        "--tiny",
+        "--requests", "8",
+        "--slots", "4",
+        "--prompt-len", "24",
+        "--max-new", "12",
+        "--max-seq", "64",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""End-to-end training driver: JEDI-net-30p on synthetic jets, a few
+hundred steps with async checkpointing and restart.
+
+    PYTHONPATH=src python examples/train_jedinet.py [--steps 300]
+
+This is the paper's application trained end to end through the full
+framework stack: data pipeline (prefetch thread) -> strength-reduced
+forward -> AdamW + warmup-cosine -> async checkpoints. Accuracy on the
+5-class synthetic surrogate rises well above the 20% chance level within
+~200 steps.
+"""
+
+import argparse
+import sys
+
+from repro.launch import train as train_driver
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--ckpt-dir", default="/tmp/jedinet_ckpt")
+    args = ap.parse_args()
+    train_driver.main([
+        "--arch", "jedinet-30p",
+        "--steps", str(args.steps),
+        "--batch", str(args.batch),
+        "--lr", "2e-3",
+        "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "100",
+        "--log-every", "25",
+    ])
+
+
+if __name__ == "__main__":
+    main()

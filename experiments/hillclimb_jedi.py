@@ -1,0 +1,84 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Hillclimb cell A: jedinet-50p x stream_1k (paper-representative).
+
+Baseline (paper-faithful strength-reduced path, batch 1000, fp32):
+memory-bound.  Iterations per EXPERIMENTS.md §Perf:
+
+  v0 baseline        forward_sr,      batch 1000, fp32
+  v1 pad-batch       forward_sr,      batch 1024 (shards 16-way), fp32
+  v2 bf16            forward_sr,      batch 1024, bf16 compute
+  v3 bilinear-split  forward_sr_split(grid), 1024, bf16  (B never built)
+  v4 no-grid gather  forward_sr_split(gather) for comparison
+
+    PYTHONPATH=src python experiments/hillclimb_jedi.py
+"""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def run_variant(name, forward, batch, dtype):
+    from repro.core import interaction_net as inet
+    from repro.launch import roofline
+    from repro.launch.mesh import make_production_mesh
+    from repro.parallel.sharding import axis_rules, batch_shardings
+
+    mesh = make_production_mesh(multi_pod=False)
+    cfg = inet.JediNetConfig(n_objects=50, n_features=16,
+                             fr_hidden=(50, 50, 50), fo_hidden=(50, 50, 50),
+                             phi_hidden=(50, 50, 50), compute_dtype=dtype)
+    a_params = jax.eval_shape(lambda k: inet.init(k, cfg),
+                              jax.random.PRNGKey(0))
+    a_x = jax.ShapeDtypeStruct((batch, 50, 16), jnp.float32)
+    p_sh = jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), a_params,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    x_sh = batch_shardings({"x": a_x}, mesh,
+                           {"x": ("batch", None, None)})["x"]
+
+    def step(params, x):
+        return forward(params, cfg, x)
+
+    with mesh, axis_rules(mesh):
+        compiled = jax.jit(step, in_shardings=(p_sh, x_sh)) \
+            .lower(a_params, a_x).compile()
+    rec = roofline.from_compiled(compiled, mesh)
+    r = rec["roofline"]
+    print(f"{name:<18} sharded={tuple(x_sh.spec)!s:<22} "
+          f"bound={r['bound']:<10} c={r['compute_s']*1e6:9.1f}us "
+          f"m={r['memory_s']*1e6:9.1f}us x={r['collective_s']*1e6:7.1f}us "
+          f"per-jet-HBM={r['hbm_bytes_per_chip']/batch*256:,.0f}B*chips/jet")
+    return rec
+
+
+def main():
+    from repro.core import interaction_net as inet
+    out = {}
+    out["v0_baseline"] = run_variant(
+        "v0 baseline", inet.forward_sr, 1000, "float32")
+    out["v1_pad_batch"] = run_variant(
+        "v1 pad-batch", inet.forward_sr, 1024, "float32")
+    out["v2_bf16"] = run_variant(
+        "v2 bf16", inet.forward_sr, 1024, "bfloat16")
+    out["v3_split_grid"] = run_variant(
+        "v3 bilinear-grid",
+        lambda p, c, x: inet.forward_sr_split(p, c, x, grid=True),
+        1024, "bfloat16")
+    out["v4_split_gather"] = run_variant(
+        "v4 bilinear-gather",
+        lambda p, c, x: inet.forward_sr_split(p, c, x, grid=False),
+        1024, "bfloat16")
+    os.makedirs("experiments/perf", exist_ok=True)
+    with open("experiments/perf/jedinet50_stream.json", "w") as f:
+        json.dump(out, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Regenerate the EXPERIMENTS.md roofline table from dry-run JSONs."""
+
+import glob
+import json
+
+import sys
+sys.path.insert(0, "src")
+
+
+def useful_ratio(arch_id, shape_name, kind, rf):
+    from repro.configs.registry import get_arch
+    from repro.launch.roofline import model_flops_lm
+    arch = get_arch(arch_id)
+    if arch.family != "lm" or rf["flops_per_chip"] == 0:
+        return None
+    shape = arch.shapes[shape_name]
+    if kind == "train":
+        n_tok = shape.dim("global_batch") * shape.dim("seq_len")
+        # with layer remat the compiled program re-runs the forward:
+        # ideal = 8*N*D (2 fwd + 4 bwd + 2 remat-fwd)
+        mf = model_flops_lm(arch.model, n_tok, train=True) * 8.0 / 6.0
+    elif shape.kind == "prefill":
+        n_tok = shape.dim("global_batch") * shape.dim("seq_len")
+        mf = model_flops_lm(arch.model, n_tok, train=False)
+    elif shape.kind == "decode":
+        mf = model_flops_lm(arch.model, shape.dim("global_batch"),
+                            train=False)
+    else:
+        return None
+    return (mf / rf["chips"]) / rf["flops_per_chip"]
+
+
+def main(out_path="experiments/roofline_table.md"):
+    rows = []
+    for path in sorted(glob.glob("experiments/dryrun/*/*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        if r["status"] != "ok":
+            rows.append((r["mesh"], r["arch"], r["shape"], "FAILED",
+                         r.get("error", "")))
+            continue
+        rf = r["roofline"]
+        ur = useful_ratio(r["arch"], r["shape"], r.get("kind"), rf)
+        from repro.configs.registry import get_arch
+        spec = get_arch(r["arch"])
+        has_scans = (spec.family == "lm"
+                     or (getattr(spec.model, "kind", "") == "equiformer_v2"
+                         and r["shape"] == "ogb_products"))
+        if "cost_variant" in r and "error" not in r["cost_variant"]:
+            counting = "unrolled (exact)"
+        elif has_scans:
+            counting = "scan-body-once (×L under-count)"
+        else:
+            counting = "exact (no scans)"
+        rows.append((
+            r["mesh"], r["arch"], r["shape"], rf["bound"],
+            rf["compute_s"] * 1e3, rf["memory_s"] * 1e3,
+            rf["collective_s"] * 1e3,
+            r["collectives"]["total_count"],
+            r.get("memory", {}).get("temp_bytes", 0) / 1e9,
+            ur, counting))
+    with open(out_path, "w") as f:
+        f.write("| mesh | arch | shape | bound | compute ms | memory ms | "
+                "collective ms | #coll | temp GB/chip | useful-compute | "
+                "counting |\n")
+        f.write("|---|---|---|---|---|---|---|---|---|---|---|\n")
+        for r in rows:
+            if r[3] == "FAILED":
+                f.write(f"| {r[0]} | {r[1]} | {r[2]} | FAILED | | | | | | "
+                        "| |\n")
+                continue
+            ur = f"{r[9]:.3f}" if r[9] else "—"
+            f.write(f"| {r[0]} | {r[1]} | {r[2]} | {r[3]} | {r[4]:.2f} | "
+                    f"{r[5]:.2f} | {r[6]:.2f} | {r[7]} | {r[8]:.2f} | "
+                    f"{ur} | {r[10]} |\n")
+    print(f"wrote {out_path} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpoint import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,10 @@
+from repro.common import tree
+from repro.common.tree import (
+    param_count,
+    param_bytes,
+    tree_cast,
+    global_norm,
+    path_map,
+)
+
+__all__ = ["tree", "param_count", "param_bytes", "tree_cast", "global_norm", "path_map"]

@@ -1,0 +1,87 @@
+"""Pytree utilities shared across the framework.
+
+All model parameters in this codebase are plain nested dicts of jnp arrays
+(no flax/haiku dependency — the substrate is built from scratch per the
+project brief).  These helpers provide the common operations a production
+trainer needs: counting, casting, norm computation and path-aware mapping
+(used by the sharding rules and the optimizer's per-parameter labels).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def param_count(tree: Pytree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(l.shape) if hasattr(l, "shape") else 1 for l in leaves))
+
+
+def param_bytes(tree: Pytree) -> int:
+    """Total bytes occupied by a pytree (using each leaf's dtype)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for l in leaves:
+        if hasattr(l, "shape"):
+            total += int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+    return total
+
+
+def tree_cast(tree: Pytree, dtype) -> Pytree:
+    """Cast every floating-point leaf of a pytree to `dtype`."""
+
+    def _cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map(_cast, tree)
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    """L2 norm over all leaves (used for grad clipping)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def path_str(path) -> str:
+    """Render a jax KeyPath as 'a/b/0/c'."""
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def path_map(fn: Callable[[str, Any], Any], tree: Pytree) -> Pytree:
+    """Map `fn(path_string, leaf) -> leaf` over a pytree."""
+    return jax.tree_util.tree_map_with_path(lambda p, l: fn(path_str(p), l), tree)
+
+
+def tree_zeros_like(tree: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(tree: Pytree, s) -> Pytree:
+    return jax.tree_util.tree_map(lambda x: x * s, tree)

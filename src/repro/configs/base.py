@@ -1,0 +1,173 @@
+"""Config schema: architectures x input shapes x run settings.
+
+Every assigned architecture gets one module in ``repro/configs/`` exporting
+an ``ARCH`` (family-specific config dataclass wrapped in ``ArchSpec``).
+Shapes are family-wide (LM / GNN / RecSys) with per-arch overrides; each
+(arch x shape) cell defines the step function to lower (train_step vs
+serve_step) and its abstract input specs for the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+# --- model-family configs ---------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    # Arctic-style dense residual FFN running in parallel with the experts.
+    dense_residual: bool = False
+    router_noise: float = 0.0
+    aux_loss_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None         # default d_model // n_heads
+    moe: Optional[MoEConfig] = None
+    sliding_window: Optional[int] = None   # SWA (h2o-danube)
+    rope_theta: float = 10000.0
+    norm: str = "rmsnorm"
+    activation: str = "silu"               # SwiGLU by default
+    tie_embeddings: bool = False
+    # remat policy for train_step: "none" | "layer" (checkpoint each block)
+    remat: str = "layer"
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # Unroll every lax.scan (layers / kv chunks / CE chunks).  Production
+    # keeps scans for compile time; the dry-run's COST variant unrolls so
+    # HLO cost_analysis counts every trip (a while body is counted ONCE,
+    # undercounting a 40-layer scan 40x).  See launch/dryrun.py.
+    unroll_scans: bool = False
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_full_attention(self) -> bool:
+        return self.sliding_window is None
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    kind: str                    # gcn | pna | meshgraphnet | equiformer_v2 | jedinet
+    n_layers: int
+    d_hidden: int
+    n_classes: int = 16
+    aggregators: tuple = ("mean",)
+    scalers: tuple = ("identity",)
+    mlp_layers: int = 2          # meshgraphnet per-MLP depth
+    l_max: int = 0               # equiformer
+    m_max: int = 0
+    n_heads: int = 1
+    norm: str = "layernorm"
+    activation: str = "relu"
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"   # GNNs here are small; fp32 keeps eSCN stable
+    remat: str = "none"
+    unroll_scans: bool = False       # see TransformerConfig.unroll_scans
+    edge_chunk: int = 1 << 20        # equiformer eSCN conv edge-scan chunk
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    kind: str = "fm"
+    n_sparse: int = 39
+    embed_dim: int = 10
+    # Criteo-like skewed table sizes; the total is what matters for sharding.
+    vocab_sizes: tuple = ()
+    dense_dim: int = 0
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+
+    @property
+    def total_rows(self) -> int:
+        return int(sum(self.vocab_sizes))
+
+
+# --- shapes ------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str        # train | prefill | decode | full_graph | minibatch |
+    #                  batched_graphs | recsys_train | recsys_serve | retrieval
+    dims: dict
+
+    def dim(self, k: str, default=None):
+        return self.dims.get(k, default)
+
+
+LM_SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train",
+                          dict(seq_len=4096, global_batch=256)),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill",
+                             dict(seq_len=32768, global_batch=32)),
+    "decode_32k": ShapeSpec("decode_32k", "decode",
+                            dict(seq_len=32768, global_batch=128)),
+    "long_500k": ShapeSpec("long_500k", "decode",
+                           dict(seq_len=524288, global_batch=1)),
+}
+
+GNN_SHAPES = {
+    "full_graph_sm": ShapeSpec("full_graph_sm", "full_graph",
+                               dict(n_nodes=2708, n_edges=10556, d_feat=1433)),
+    "minibatch_lg": ShapeSpec("minibatch_lg", "minibatch",
+                              dict(n_nodes=232965, n_edges=114615892,
+                                   batch_nodes=1024, fanout=(15, 10),
+                                   d_feat=602)),
+    "ogb_products": ShapeSpec("ogb_products", "full_graph",
+                              dict(n_nodes=2449029, n_edges=61859140,
+                                   d_feat=100)),
+    "molecule": ShapeSpec("molecule", "batched_graphs",
+                          dict(n_nodes=30, n_edges=64, batch=128, d_feat=16)),
+}
+
+RECSYS_SHAPES = {
+    "train_batch": ShapeSpec("train_batch", "recsys_train", dict(batch=65536)),
+    "serve_p99": ShapeSpec("serve_p99", "recsys_serve", dict(batch=512)),
+    "serve_bulk": ShapeSpec("serve_bulk", "recsys_serve", dict(batch=262144)),
+    "retrieval_cand": ShapeSpec("retrieval_cand", "retrieval",
+                                dict(batch=1, n_candidates=1000000)),
+}
+
+JEDI_SHAPES = {
+    "stream_1k": ShapeSpec("stream_1k", "jedi_infer", dict(batch=1000)),
+    "train_jets": ShapeSpec("train_jets", "jedi_train", dict(batch=4096)),
+}
+
+
+# --- arch wrapper -------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                  # lm | gnn | recsys | jedi
+    model: Any                   # TransformerConfig | GNNConfig | RecsysConfig | JediNetConfig
+    shapes: dict                 # name -> ShapeSpec
+    source: str = ""             # citation tag from the assignment
+    notes: str = ""
+    # cells intentionally not run for this arch (e.g. long_500k on pure
+    # full-attention archs), mapped to the reason string for DESIGN.md.
+    skipped_shapes: dict = dataclasses.field(default_factory=dict)
+
+    def runnable_shapes(self):
+        return {k: v for k, v in self.shapes.items()
+                if k not in self.skipped_shapes}

@@ -1,0 +1,28 @@
+"""LL-GNN core: interaction-network JEDI-net with strength reduction,
+edge-major layout, fused execution and algorithm-hardware co-design."""
+
+from repro.core.adjacency import (
+    edge_index_maps,
+    sender_index_matrix,
+    dense_relation_matrices,
+    mmm_op_counts,
+)
+from repro.core.interaction_net import (
+    JediNetConfig,
+    init,
+    forward_dense,
+    forward_sr,
+    forward_fused,
+    build_b_matrix,
+    aggregate_incoming,
+    loss_fn,
+    FORWARD_FNS,
+)
+from repro.core import codesign
+
+__all__ = [
+    "edge_index_maps", "sender_index_matrix", "dense_relation_matrices",
+    "mmm_op_counts", "JediNetConfig", "init", "forward_dense", "forward_sr",
+    "forward_fused", "build_b_matrix", "aggregate_incoming", "loss_fn",
+    "FORWARD_FNS", "codesign",
+]

@@ -1,0 +1,3 @@
+from repro.data import jets, lm_data, graphs, neighbor_sampler, recsys_data
+
+__all__ = ["jets", "lm_data", "graphs", "neighbor_sampler", "recsys_data"]

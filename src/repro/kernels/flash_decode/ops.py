@@ -1,0 +1,41 @@
+"""Jit'd public wrapper for the flash-decode kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode import kernel as K
+
+
+def _pick_chunk(s_len: int, d: int) -> int:
+    """Largest cache chunk with k+v fp32 tiles within ~4 MB VMEM."""
+    budget = 4 * 1024 * 1024
+    c = max(128, min(s_len, budget // max(2 * d * 4, 1)))
+    while s_len % c:
+        c -= 1
+    return c
+
+
+@partial(jax.jit, static_argnames=("window", "chunk", "interpret"))
+def flash_decode(q, k, v, q_pos, kv_pos, *, window=None, chunk=None,
+                 interpret: bool = False):
+    """One-token GQA attention over a KV cache.
+
+    q: (B, H, D) UNscaled; k/v: (B, S, Hkv, D); q_pos: (B,) int32;
+    kv_pos: (B, S) int32, -1 for unwritten slots.  Returns (B, H, D)
+    in q.dtype's float32 accumulation.
+    """
+    b, h, d = q.shape
+    hkv = k.shape[2]
+    assert h % hkv == 0, (h, hkv)
+    g = h // hkv
+    scale = 1.0 / (d ** 0.5)
+    qg = (q.astype(jnp.float32) * scale).reshape(b, hkv, g, d)
+    c = chunk or _pick_chunk(k.shape[1], d)
+    o = K.flash_decode_kernel_call(qg, k, v, q_pos.astype(jnp.int32),
+                                   kv_pos.astype(jnp.int32), chunk=c,
+                                   window=window, interpret=interpret)
+    return o.reshape(b, h, d)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash-decode kernel (one-token GQA attention)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_decode_ref(q, k, v, q_pos, kv_pos, *, window=None):
+    """q: (B, Hkv, G, D) pre-scaled; k/v: (B, S, Hkv, D);
+    q_pos: (B,) int32; kv_pos: (B, S) int32 (-1 invalid).
+    Returns (B, Hkv, G, D) float32.
+    """
+    s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    ok = kv_pos >= 0
+    ok &= kv_pos <= q_pos[:, None]
+    if window is not None:
+        ok &= (q_pos[:, None] - kv_pos) < window
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return o / jnp.maximum(l, 1e-30)

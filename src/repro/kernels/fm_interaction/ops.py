@@ -1,0 +1,24 @@
+"""Jit'd public wrapper for the FM interaction kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.fm_interaction import kernel as K
+
+
+def _pick_block_b(bsz: int, f: int, k: int) -> int:
+    budget = 8 * 1024 * 1024
+    bb = max(1, min(bsz, budget // max(f * k * 4, 1)))
+    while bsz % bb:
+        bb -= 1
+    return bb
+
+
+@partial(jax.jit, static_argnames=("interpret", "block_b"))
+def fm_interaction(v, *, interpret: bool = False, block_b: int | None = None):
+    """v: (B, F, K) per-field embeddings -> (B,) pairwise-interaction term."""
+    bb = block_b or _pick_block_b(*v.shape)
+    return K.fm_interaction_kernel_call(v, block_b=bb, interpret=interpret)

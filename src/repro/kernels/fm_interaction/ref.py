@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the FM interaction kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fm_interaction_ref(v):
+    """v: (B, F, K) -> (B,) float32: sum_{i<j} <v_i, v_j>."""
+    v = v.astype(jnp.float32)
+    sum_v = jnp.sum(v, axis=-2)
+    sum_sq = jnp.sum(jnp.square(v), axis=-2)
+    return 0.5 * jnp.sum(jnp.square(sum_v) - sum_sq, axis=-1)

@@ -1,0 +1,33 @@
+"""Jit'd public wrapper for the fused JEDI-net edge block."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_jedinet import kernel as K
+
+
+def _pick_block_b(bsz: int, n_o: int, width: int) -> int:
+    """Largest batch tile whose activation grid fits a ~8 MB VMEM budget."""
+    budget = 8 * 1024 * 1024
+    per_sample = n_o * n_o * max(width, 8) * 4          # fp32 grid acts
+    bb = max(1, min(bsz, budget // max(per_sample, 1)))
+    # round down to a divisor of bsz (grid must tile exactly)
+    while bsz % bb:
+        bb -= 1
+    return bb
+
+
+@partial(jax.jit, static_argnames=("cfg", "interpret", "block_b"))
+def fused_edge_block(params_fr, cfg, x, *, interpret: bool = False,
+                     block_b: int | None = None):
+    """Ebar = aggregated f_R messages. x: (B, N_o, P) -> (B, N_o, D_e)."""
+    w1r, w1s, b1, rest = K.split_first_layer(params_fr, cfg.n_features)
+    width = max([w1r.shape[-1]] + [r.shape[-1] for r in rest[::2]])
+    bb = block_b or _pick_block_b(x.shape[0], cfg.n_objects, width)
+    return K.fused_edge_block_kernel_call(
+        x.astype(jnp.float32), w1r, w1s, b1, rest,
+        activation=cfg.activation, block_b=bb, interpret=interpret)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused JEDI-net edge block.
+
+Computes Ebar = (sum of f_R messages over incoming edges) per node, i.e.
+MMM1/2 + f_R + MMM3 of the paper, using the strength-reduced but UNFUSED
+path (explicit B matrix in "HBM").  The Pallas kernel must match this to
+float tolerance for every shape/dtype in the sweep.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import adjacency
+from repro.nn import core as nn
+
+
+def fused_edge_block_ref(params_fr, cfg, x):
+    """x: (B, N_o, P) -> Ebar (B, N_o, D_e), float32."""
+    n_o, p = cfg.n_objects, cfg.n_features
+    send_idx = jnp.asarray(adjacency.sender_index_matrix(n_o))    # (N_o, N_o-1)
+
+    b1 = jnp.broadcast_to(x[..., :, None, :],
+                          (*x.shape[:-2], n_o, n_o - 1, p))
+    b2 = jnp.take(x, send_idx.reshape(-1), axis=-2)
+    b2 = b2.reshape(*x.shape[:-2], n_o, n_o - 1, p)
+    b = jnp.concatenate([b1, b2], axis=-1)                        # receiver||sender
+
+    e = nn.mlp_apply(params_fr, b.astype(jnp.float32),
+                     activation=cfg.activation,
+                     compute_dtype=jnp.float32)                   # (B, N_o, N_o-1, D_e)
+    return jnp.sum(e, axis=-2).astype(jnp.float32)                # (B, N_o, D_e)

@@ -1,0 +1,6 @@
+# NOTE: repro.launch.dryrun must be executed as a fresh process
+# (python -m repro.launch.dryrun) so its XLA_FLAGS line runs before jax
+# initializes; do not import it from here.
+from repro.launch.mesh import make_production_mesh, make_host_mesh
+
+__all__ = ["make_production_mesh", "make_host_mesh"]

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+XLA_FLAGS for 512 host devices before first jax init; smoke tests see the
+real single CPU device.
+
+Mesh shapes (TPU v5e pods):
+    single-pod: (16, 16)    axes ("data", "model")   — 256 chips
+    multi-pod : (2, 16, 16) axes ("pod", "data", "model") — 512 chips
+
+Axis semantics (bound by repro.parallel.sharding.DEFAULT_RULES):
+    pod   — data parallelism across pods (gradient all-reduce over DCI)
+    data  — FSDP + expert parallelism + batch DP inside a pod
+    model — tensor parallelism / sequence parallelism inside a pod
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a 1D (data,) mesh — for CPU examples."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -1,0 +1,188 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs      / (chips * 197e12  bf16 FLOP/s)
+    memory     = HLO_bytes      / (chips * 819e9   B/s HBM)
+    collective = collective_B   / (chips * 50e9    B/s per ICI link)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.  Collective
+bytes are NOT in cost_analysis: we parse the optimized HLO text and sum the
+output-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction.  cost_analysis reports
+PER-DEVICE numbers for SPMD-partitioned modules (the module is the
+per-device program), so terms divide by chips only where the metric is
+whole-job (see below: we treat cost_analysis as per-chip already and do
+NOT divide again; collective bytes are summed per-device the same way).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# --- TPU v5e hardware constants (per chip) ---
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (effective, one direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                   "all-to-all", "collective-permute")
+
+# matches e.g.  f32[128,1024]{1,0}  or  bf16[4]  or tuple elements
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s*("
+    + "|".join(_COLLECTIVE_OPS) + r")(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes of collective ops in optimized HLO, by op kind.
+
+    ``*-start`` ops carry the payload; matching ``*-done`` ops repeat the
+    shape, so -done lines are skipped to avoid double counting.
+    """
+    per_op = {k: 0 for k in _COLLECTIVE_OPS}
+    count = {k: 0 for k in _COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+)$", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for op in _COLLECTIVE_OPS:
+            # opcode appears between the '=' shape and '(' operands
+            if re.search(r"\b" + re.escape(op) + r"(-start)?\(", rhs):
+                if re.search(r"\b" + re.escape(op) + r"-done\(", rhs):
+                    break
+                # bytes = output shape(s) of the instruction
+                shape_part = rhs.split(op)[0]
+                per_op[op] += _shape_bytes(shape_part)
+                count[op] += 1
+                break
+    return {"bytes_by_op": per_op,
+            "counts_by_op": count,
+            "total_bytes": sum(per_op.values()),
+            "total_count": sum(count.values())}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # per device
+    hbm_bytes: float             # per device
+    coll_bytes: float            # per device
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """No-overlap upper bound on the step time."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bound": self.bound,
+            "step_s": self.step_s,
+        }
+
+
+def from_compiled(compiled, mesh) -> dict:
+    """Derive roofline terms + memory stats from a compiled executable."""
+    chips = mesh.devices.size
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):         # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll = collective_bytes(hlo)
+    terms = RooflineTerms(flops=flops, hbm_bytes=hbm,
+                          coll_bytes=float(coll["total_bytes"]), chips=chips)
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(ma, "peak_memory_in_bytes", 0) or 0),
+        }
+    except Exception:
+        pass
+    return {"roofline": terms.to_dict(), "collectives": coll, "memory": mem}
+
+
+def model_flops_lm(cfg, n_tokens: int, train: bool = True) -> float:
+    """MODEL_FLOPS = 6*N_active*D for train, 2*N*D for inference."""
+    from repro.common.tree import param_count
+    import jax
+    import jax.numpy as jnp  # noqa: F401
+    from repro.models import transformer as tfm
+
+    a_params = jax.eval_shape(
+        lambda k: tfm.init(k, cfg), jax.random.PRNGKey(0))
+    total = sum(int(np_prod(l.shape))
+                for l in jax.tree_util.tree_leaves(a_params))
+    if cfg.moe is not None:
+        # active experts per token = top_k of n_experts (+ dense residual)
+        moe = cfg.moe
+        expert_p = 3 * cfg.d_model * cfg.d_ff
+        per_layer_moe = moe.n_experts * expert_p
+        active_moe = moe.top_k * expert_p
+        total_active = total - cfg.n_layers * (per_layer_moe - active_moe)
+    else:
+        total_active = total
+    return (6.0 if train else 2.0) * total_active * n_tokens
+
+
+def np_prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out

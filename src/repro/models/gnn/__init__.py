@@ -1,0 +1,8 @@
+from repro.models.gnn import segment_ops, gcn, pna, meshgraphnet, equiformer_v2
+
+GNN_MODULES = {
+    "gcn": gcn,
+    "pna": pna,
+    "meshgraphnet": meshgraphnet,
+    "equiformer_v2": equiformer_v2,
+}

@@ -1,0 +1,261 @@
+"""EquiformerV2-style equivariant graph attention via eSCN SO(2) convolutions.
+
+arXiv:2306.12059.  Node features are real-SH irreps (N, (l_max+1)^2, C)
+(sphere channels C for every (l, m)).  Per layer:
+
+1. edge scores from invariant (l=0) channels + distance RBF -> per-head
+   segment-softmax attention over incoming edges;
+2. eSCN conv: rotate source irreps into the edge frame (Wigner align-z,
+   fast J-matrix path), SO(2)-mix per |m| <= m_max with complex-pair
+   weights, gate by a radial MLP, rotate back;
+3. aggregate messages (attention-weighted segment-sum), per-l linear
+   projection, residual;
+4. equivariant LayerNorm + gated FFN (SiLU on l=0; sigmoid(l=0) gates
+   scaling l>0 — the gate nonlinearity; the paper's S2 grid activation is
+   noted as a simplification in DESIGN.md).
+
+Large graphs (ogb-products: 61.8M edges x 49 irreps x 128ch) cannot
+materialize per-edge messages in HBM at once: messages run in a
+lax.scan over edge chunks with a carried node accumulator — the attention
+denominator is computed in a cheap full-edge first pass (scores are
+per-edge scalars).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.models.gnn import segment_ops as seg
+from repro.models.gnn import so3
+from repro.nn import core as nn
+from repro.parallel.sharding import constrain
+
+N_RBF = 8
+_EDGE_CHUNK = 1 << 20            # default; override via GNNConfig.edge_chunk
+
+
+def _rbf(dist, r_max: float = 5.0):
+    centers = jnp.linspace(0.0, r_max, N_RBF)
+    gamma = N_RBF / r_max
+    return jnp.exp(-gamma * jnp.square(dist[..., None] - centers))
+
+
+def _m_l_counts(l_max: int, m_max: int):
+    """For each m in 0..m_max: the l values carrying that m."""
+    return {m: list(range(m, l_max + 1)) for m in range(m_max + 1)}
+
+
+def init(key, cfg: GNNConfig, d_in: int, n_out: int):
+    c, lmax, mmax = cfg.d_hidden, cfg.l_max, cfg.m_max
+    k = (lmax + 1) ** 2
+    ml = _m_l_counts(lmax, mmax)
+    keys = iter(jax.random.split(key, 6 + cfg.n_layers * 16))
+
+    def dense(d1, d2):
+        return nn.dense_init(next(keys), d1, d2, scale="lecun")
+
+    params = {
+        "gnn_embed": dense(d_in, c),
+        "gnn_layers": [],
+        "gnn_out_ln": nn.layernorm_init(c),
+        "gnn_decoder": dense(c, n_out),
+    }
+    for _ in range(cfg.n_layers):
+        lp = {
+            "radial": nn.mlp_init(next(keys), N_RBF, [c],
+                                  (mmax + 1) * c),
+            "alpha": nn.mlp_init(next(keys), 2 * c + N_RBF, [c],
+                                 cfg.n_heads),
+            "so2_m0": dense(len(ml[0]) * c, len(ml[0]) * c),
+            "so2_m": [],
+            "proj": {"w": (jax.random.normal(next(keys), (lmax + 1, c, c))
+                           * (1.0 / c ** 0.5))},
+            "ln_scale": jnp.ones((lmax + 1, c)),
+            "ffn_l0": nn.mlp_init(next(keys), c, [2 * c], c),
+            "ffn_gate": dense(c, lmax * c),
+            "ffn_mix": {"w": (jax.random.normal(next(keys), (lmax + 1, c, c))
+                              * (1.0 / c ** 0.5))},
+        }
+        for m in range(1, mmax + 1):
+            dm = len(ml[m]) * c
+            lp["so2_m"].append({"wr": dense(dm, dm), "wi": dense(dm, dm)})
+        params["gnn_layers"].append(lp)
+    return params
+
+
+def _so2_conv(lp, cfg: GNNConfig, x_rot, gates, *, truncated: bool = False):
+    """SO(2) linear mix in the edge frame, truncated at m_max.
+
+    x_rot: (E, K, C) rotated irreps — K = (l_max+1)^2 in the full layout,
+    or so3.truncated_size(l_max, m_max) when ``truncated`` (only the live
+    |m| <= m_max rows were rotated; see §Perf cell C).  gates:
+    (E, (m_max+1), C) radial gates.  Returns same layout as input with
+    |m| > m_max components zeroed (full layout only).
+    """
+    lmax, mmax, c = cfg.l_max, cfg.m_max, cfg.d_hidden
+    ml = _m_l_counts(lmax, mmax)
+    e = x_rot.shape[0]
+    out = jnp.zeros_like(x_rot)
+
+    if truncated:
+        def index(l, m):
+            return so3.truncated_index(l, m, lmax, mmax)
+    else:
+        index = so3.flat_index
+
+    # m = 0
+    idx0 = jnp.asarray([index(l, 0) for l in ml[0]])
+    x0 = x_rot[:, idx0, :].reshape(e, -1)
+    y0 = nn.dense_apply(lp["so2_m0"], x0).reshape(e, len(ml[0]), c)
+    out = out.at[:, idx0, :].set(y0 * gates[:, 0:1, :])
+
+    # m > 0: complex-pair mixing
+    for m in range(1, mmax + 1):
+        ls = ml[m]
+        ip = jnp.asarray([index(l, m) for l in ls])
+        im = jnp.asarray([index(l, -m) for l in ls])
+        xp = x_rot[:, ip, :].reshape(e, -1)
+        xm = x_rot[:, im, :].reshape(e, -1)
+        wr, wi = lp["so2_m"][m - 1]["wr"], lp["so2_m"][m - 1]["wi"]
+        yp = nn.dense_apply(wr, xp) - nn.dense_apply(wi, xm)
+        ym = nn.dense_apply(wi, xp) + nn.dense_apply(wr, xm)
+        g = gates[:, m:m + 1, :]
+        out = out.at[:, ip, :].set(yp.reshape(e, len(ls), c) * g)
+        out = out.at[:, im, :].set(ym.reshape(e, len(ls), c) * g)
+    return out
+
+
+def _layer(lp, cfg: GNNConfig, h, graph, dirs, rbf):
+    """One equivariant attention block. h: (N, K, C)."""
+    s, r = graph["senders"], graph["receivers"]
+    n, k, c = h.shape
+    heads = cfg.n_heads
+    ch = c // heads
+
+    # ---- pass 1: attention scores (cheap, full-edge) ----
+    x0 = h[:, 0, :]
+    sc_in = jnp.concatenate([seg.gather(x0, s), seg.gather(x0, r), rbf], -1)
+    scores = nn.mlp_apply(lp["alpha"], sc_in, activation="silu")
+    alpha = seg.segment_softmax(scores, r, n)            # (E, heads)
+    # zero-length edges (self-loops, padded sink edges) have no direction:
+    # an align-to-z frame would be arbitrary and BREAK equivariance, so
+    # their conv messages are masked out (self-interaction lives in the
+    # residual/FFN path instead).
+    valid = (jnp.sum(dirs * dirs, axis=-1) > 0.25).astype(alpha.dtype)
+    alpha = alpha * valid[:, None]
+
+    gates_all = jax.nn.silu(
+        nn.mlp_apply(lp["radial"], rbf, activation="silu")
+    ).reshape(-1, cfg.m_max + 1, c)
+
+    # ---- pass 2: eSCN conv, chunked over edges ----
+    # §Perf cell C: only |m| <= m_max rotated components are live in the
+    # SO(2) mix, so the rotation keeps 29/49 rows (l_max=6, m_max=2) —
+    # exact rewrite, ~40% off the dominant per-edge tensor.
+    def conv_chunk(sc, rc, dc, gc, ac):
+        d_blocks = so3.wigner_align_z(cfg.l_max, dc)
+        xs = seg.gather(h, sc)                           # (e, K, C)
+        x_rot = so3.apply_wigner_truncated(d_blocks, xs, cfg.m_max)
+        y_rot = _so2_conv(lp, cfg, x_rot, gc, truncated=True)
+        y = so3.apply_wigner_expand(d_blocks, y_rot, cfg.m_max)
+        # attention-weight per head
+        y = y.reshape(*y.shape[:-1], heads, ch) * ac[:, None, :, None]
+        return y.reshape(*y.shape[:-2], c), rc
+
+    e_total = s.shape[0]
+    edge_chunk = getattr(cfg, "edge_chunk", _EDGE_CHUNK) or _EDGE_CHUNK
+    if e_total > edge_chunk:
+        n_chunks = -(-e_total // edge_chunk)
+        pad = n_chunks * edge_chunk - e_total
+        # padded edges point at segment n (sliced off after scatter)
+        sp = jnp.pad(s, (0, pad))
+        rp = jnp.pad(r, (0, pad), constant_values=n)
+        dp = jnp.pad(dirs, ((0, pad), (0, 0)), constant_values=1.0)
+        gp = jnp.pad(gates_all, ((0, pad), (0, 0), (0, 0)))
+        ap = jnp.pad(alpha, ((0, pad), (0, 0)))
+        shp = lambda a: a.reshape(n_chunks, edge_chunk, *a.shape[1:])
+
+        def body(acc, xs_):
+            y, rc = conv_chunk(*xs_)
+            return acc + seg.scatter_sum(y, rc, n + 1), None
+
+        acc0 = jnp.zeros((n + 1, k, c), h.dtype)
+        agg, _ = jax.lax.scan(
+            body, acc0, (shp(sp), shp(rp), shp(dp), shp(gp), shp(ap)),
+            unroll=n_chunks if cfg.unroll_scans else 1)
+        agg = agg[:n]
+    else:
+        y, rc = conv_chunk(s, r, dirs, gates_all, alpha)
+        y = constrain(y, "edges", None, None)
+        agg = seg.scatter_sum(y, rc, n)
+
+    # ---- node update ----
+    agg = _per_l_mix(lp["proj"]["w"], cfg.l_max, agg)
+    h = h + agg
+    h = _equivariant_ln(lp["ln_scale"], cfg.l_max, h)
+
+    # ---- gated FFN ----
+    f0 = nn.mlp_apply(lp["ffn_l0"], h[:, 0, :], activation="silu")
+    gate = jax.nn.sigmoid(nn.dense_apply(lp["ffn_gate"], h[:, 0, :]))
+    gate = gate.reshape(n, cfg.l_max, c)
+    hl = _per_l_mix(lp["ffn_mix"]["w"], cfg.l_max, h)
+    upd = jnp.concatenate([f0[:, None, :], hl[:, 1:, :] * _expand_l(
+        gate, cfg.l_max)], axis=1)
+    h = h + upd
+    h = constrain(h, "nodes", None, None)
+    return h
+
+
+def _expand_l(per_l, l_max: int):
+    """(N, l_max, C) per-l gates -> (N, K - 1, C) broadcast over m."""
+    reps = [per_l[:, l - 1:l, :].repeat(2 * l + 1, axis=1)
+            for l in range(1, l_max + 1)]
+    return jnp.concatenate(reps, axis=1)
+
+
+def _per_l_mix(w, l_max: int, h):
+    """Per-l channel mixing: w (l_max+1, C, C), h (N, K, C)."""
+    outs = []
+    for l in range(l_max + 1):
+        xl = h[:, l * l:(l + 1) ** 2, :]
+        outs.append(jnp.einsum("nmc,cd->nmd", xl, w[l]))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _equivariant_ln(scale, l_max: int, h, eps: float = 1e-5):
+    outs = []
+    for l in range(l_max + 1):
+        xl = h[:, l * l:(l + 1) ** 2, :]
+        if l == 0:
+            mu = jnp.mean(xl, axis=-1, keepdims=True)
+            var = jnp.var(xl, axis=-1, keepdims=True)
+            y = (xl - mu) * jax.lax.rsqrt(var + eps)
+        else:
+            nrm = jnp.mean(jnp.square(xl), axis=(-2, -1), keepdims=True)
+            y = xl * jax.lax.rsqrt(nrm + eps)
+        outs.append(y * scale[l][None, None, :])
+    return jnp.concatenate(outs, axis=1)
+
+
+def apply(params, cfg: GNNConfig, graph):
+    """graph: x (N, F), pos (N, 3), senders/receivers (E,) -> (N, n_out)."""
+    x, pos = graph["x"], graph["pos"]
+    s, r = graph["senders"], graph["receivers"]
+    n = x.shape[0]
+    k = (cfg.l_max + 1) ** 2
+
+    dx = seg.gather(pos, s) - seg.gather(pos, r)
+    dist = jnp.linalg.norm(dx, axis=-1)
+    dirs = dx / jnp.maximum(dist, 1e-9)[:, None]
+    rbf = _rbf(dist)
+
+    h0 = nn.dense_apply(params["gnn_embed"], x)          # (N, C) invariant
+    h = jnp.zeros((n, k, cfg.d_hidden), h0.dtype).at[:, 0, :].set(h0)
+
+    for lp in params["gnn_layers"]:
+        h = _layer(lp, cfg, h, graph, dirs, rbf)
+
+    inv = nn.layernorm_apply(params["gnn_out_ln"], h[:, 0, :])
+    return nn.dense_apply(params["gnn_decoder"], inv)

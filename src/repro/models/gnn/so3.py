@@ -1,0 +1,272 @@
+"""SO(3) machinery for EquiformerV2's eSCN convolution.
+
+The eSCN trick (arXiv:2302.03655 / 2306.12059): rotate each edge's source
+irreps into a frame where the edge direction is +z; there the SO(3) tensor
+product degenerates into independent SO(2) mixes per |m| (O(L^3) instead of
+O(L^6)), truncated at m_max.
+
+Wigner rotation matrices are built two ways:
+
+* ``wigner_solve``   — the oracle: for any rotation R, solve
+  D^l = Y^l(R S) @ pinv(Y^l(S)) on a fixed set S of sample directions.
+  Convention-free and exact to fp precision; used in tests and to
+  precompute the J^l constants.
+* ``wigner_align_z`` — the fast per-edge path: decompose the align-to-z
+  rotation as Ry(-beta) Rz(-alpha) and use the e3nn J-matrix identity
+  D_y(b) = J D_z(b) J with J^l = D^l(Ry(pi/2)) precomputed at import via
+  the oracle.  Per-edge cost is two small dense matmuls per l — no expm,
+  no per-edge solve.
+
+Real spherical harmonics use the standard orthonormal basis, ordering
+m = -l..l, flat index l*l + l + m; D^l is orthogonal in this basis.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def num_coeffs(l_max: int) -> int:
+    return (l_max + 1) ** 2
+
+
+def flat_index(l: int, m: int) -> int:
+    return l * l + l + m
+
+
+# ---------------------------------------------------------------------------
+# real spherical harmonics (jnp, vmappable)
+# ---------------------------------------------------------------------------
+
+def real_sph_harm(l_max: int, dirs, xp=jnp):
+    """dirs: (..., 3) unit vectors -> (..., (l_max+1)^2) real SH values.
+
+    ``xp`` selects the array namespace: jnp on the traced fast path, np for
+    the Wigner oracle constants so their lru-cached computation never
+    captures tracers when first touched inside a jit trace.
+    """
+    x, y, z = dirs[..., 0], dirs[..., 1], dirs[..., 2]
+    rxy = xp.sqrt(xp.maximum(x * x + y * y, 1e-24))
+    ct = xp.clip(z, -1.0, 1.0)             # cos(theta)
+    st = rxy                               # sin(theta) >= 0
+    cp, sp = x / rxy, y / rxy              # cos/sin(phi)
+
+    # cos(m phi), sin(m phi) by recurrence
+    cos_m = [xp.ones_like(cp), cp]
+    sin_m = [xp.zeros_like(sp), sp]
+    for m in range(2, l_max + 1):
+        cos_m.append(2 * cp * cos_m[-1] - cos_m[-2])
+        sin_m.append(2 * cp * sin_m[-1] - sin_m[-2])
+
+    # associated Legendre P_l^m(ct) with sin^m factors, standard recurrences
+    p = {}
+    p[(0, 0)] = xp.ones_like(ct)
+    for m in range(1, l_max + 1):
+        p[(m, m)] = -(2 * m - 1) * st * p[(m - 1, m - 1)]
+    for m in range(0, l_max):
+        p[(m + 1, m)] = (2 * m + 1) * ct * p[(m, m)]
+    for m in range(0, l_max + 1):
+        for l in range(m + 2, l_max + 1):
+            p[(l, m)] = ((2 * l - 1) * ct * p[(l - 1, m)]
+                         - (l + m - 1) * p[(l - 2, m)]) / (l - m)
+
+    out = []
+    for l in range(l_max + 1):
+        row = [None] * (2 * l + 1)
+        for m in range(0, l + 1):
+            n = math.sqrt((2 * l + 1) / (4 * math.pi)
+                          * math.factorial(l - m) / math.factorial(l + m))
+            if m == 0:
+                row[l] = n * p[(l, 0)]
+            else:
+                row[l + m] = math.sqrt(2) * n * p[(l, m)] * cos_m[m]
+                row[l - m] = math.sqrt(2) * n * p[(l, m)] * sin_m[m]
+        out.extend(row)
+    return xp.stack(out, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Wigner-D via numeric solve (oracle) and J-matrix fast path
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _sample_dirs(l_max: int) -> np.ndarray:
+    """Well-spread fixed sample directions (Fibonacci sphere)."""
+    n = max(2 * num_coeffs(l_max), 32)
+    i = np.arange(n) + 0.5
+    phi = np.arccos(1 - 2 * i / n)
+    theta = np.pi * (1 + 5 ** 0.5) * i
+    return np.stack([np.sin(phi) * np.cos(theta),
+                     np.sin(phi) * np.sin(theta),
+                     np.cos(phi)], axis=-1)
+
+
+@lru_cache(maxsize=None)
+def _sh_pinv(l_max: int):
+    """Per-l pseudo-inverse of Y^l at the sample dirs (numpy, at import)."""
+    s = _sample_dirs(l_max)
+    ys = real_sph_harm(l_max, s, xp=np)                     # (n_s, (L+1)^2)
+    pinvs = []
+    for l in range(l_max + 1):
+        block = ys[:, l * l:(l + 1) ** 2]                   # (n_s, 2l+1)
+        pinvs.append(np.linalg.pinv(block))                 # (2l+1, n_s)
+    return pinvs
+
+
+def wigner_solve(l_max: int, rot, xp=jnp):
+    """Oracle Wigner blocks for rotation matrices rot: (..., 3, 3).
+
+    Returns list per l of (..., 2l+1, 2l+1) with
+    Y^l(R r) = D^l(R) @ Y^l(r).
+    """
+    s = xp.asarray(_sample_dirs(l_max), dtype=rot.dtype)    # (n_s, 3)
+    rs = xp.einsum("...ij,nj->...ni", rot, s)               # (..., n_s, 3)
+    y_rs = real_sph_harm(l_max, rs, xp=xp)                  # (..., n_s, K)
+    blocks = []
+    for l in range(l_max + 1):
+        pinv = xp.asarray(_sh_pinv(l_max)[l], dtype=rot.dtype)
+        yb = y_rs[..., l * l:(l + 1) ** 2]                  # (..., n_s, 2l+1)
+        # D^l: rows = rotated SH index: Y(R s) = D Y(s) =>
+        # y_rs[n, i] = sum_j D[i, j] Y[n, j]  =>  D = (pinv @ y_rs)^T
+        d = xp.swapaxes(xp.einsum("jn,...ni->...ji", pinv, yb), -1, -2)
+        blocks.append(d)
+    return blocks
+
+
+@lru_cache(maxsize=None)
+def j_matrices(l_max: int) -> tuple:
+    """J^l = D^l(R_swap) as numpy constants (via the numpy oracle, so
+    first touch inside a jit trace stays concrete).
+
+    R_swap is the INVOLUTIVE 180-degree rotation about (y+z)/sqrt(2)
+    (y<->z, x->-x), the e3nn convention: Ry(b) = R_swap Rz(b) R_swap
+    holds exactly (conjugation by an involution), hence
+    D(Ry(b)) = J D(Rz(b)) J with J^2 = I.  (Ry(pi/2) does NOT satisfy
+    this identity — conjugating Rz by it yields Rx, not Ry.)
+    """
+    r_swap = np.array([[-1.0, 0.0, 0.0],
+                       [0.0, 0.0, 1.0],
+                       [0.0, 1.0, 0.0]])
+    blocks = wigner_solve(l_max, r_swap, xp=np)
+    return tuple(np.asarray(b) for b in blocks)
+
+
+def _dz_blocks(l_max: int, ang):
+    """D^l(Rz(ang)) blocks; ang: (...,) -> list of (..., 2l+1, 2l+1)."""
+    blocks = []
+    for l in range(l_max + 1):
+        dim = 2 * l + 1
+        rows = []
+        cos = [jnp.cos(m * ang) for m in range(l + 1)]
+        sin = [jnp.sin(m * ang) for m in range(l + 1)]
+        d = jnp.zeros((*ang.shape, dim, dim), ang.dtype)
+        d = d.at[..., l, l].set(1.0)
+        for m in range(1, l + 1):
+            ip, im = l + m, l - m
+            d = d.at[..., ip, ip].set(cos[m])
+            d = d.at[..., im, im].set(cos[m])
+            d = d.at[..., ip, im].set(-sin[m])
+            d = d.at[..., im, ip].set(sin[m])
+        blocks.append(d)
+    return blocks
+
+
+def wigner_align_z(l_max: int, dirs):
+    """Wigner blocks of the rotation taking each dir to +z (fast path).
+
+    dirs: (..., 3) unit vectors.  R = Ry(-beta) @ Rz(-alpha) with
+    alpha = atan2(y, x), beta = arccos(z);  D = [J Dz(-beta) J] Dz(-alpha).
+    """
+    x, y, z = dirs[..., 0], dirs[..., 1], dirs[..., 2]
+    alpha = jnp.arctan2(y, x)
+    beta = jnp.arccos(jnp.clip(z, -1.0, 1.0))
+    dz_a = _dz_blocks(l_max, -alpha)
+    dz_b = _dz_blocks(l_max, -beta)
+    js = j_matrices(l_max)
+    blocks = []
+    for l in range(l_max + 1):
+        j = jnp.asarray(js[l], dtype=dirs.dtype)
+        dy = j @ dz_b[l] @ j
+        blocks.append(dy @ dz_a[l])
+    return blocks
+
+
+def apply_wigner(blocks, feats, *, transpose: bool = False):
+    """Rotate irrep features. feats: (..., (l_max+1)^2, C)."""
+    outs = []
+    for l, d in enumerate(blocks):
+        xl = feats[..., l * l:(l + 1) ** 2, :]
+        if transpose:
+            outs.append(jnp.einsum("...ji,...jc->...ic", d, xl))
+        else:
+            outs.append(jnp.einsum("...ij,...jc->...ic", d, xl))
+    return jnp.concatenate(outs, axis=-2)
+
+
+def truncated_size(l_max: int, m_max: int) -> int:
+    """Number of irrep components with |m| <= m_max."""
+    return sum(min(2 * l + 1, 2 * m_max + 1) for l in range(l_max + 1))
+
+
+def apply_wigner_truncated(blocks, feats, m_max: int):
+    """Rotate INTO the edge frame keeping only |m| <= m_max output rows.
+
+    The eSCN SO(2) conv reads and writes only the |m| <= m_max components
+    of the rotated features (everything else is zeroed), so the full
+    (2l+1)x(2l+1) rotation wastes compute and bytes: for l_max=6/m_max=2
+    only 29 of 49 rows are live.  Returns (..., truncated_size, C) in
+    per-l blocks of min(2l+1, 2m_max+1) rows, ordered m = -m_max..m_max.
+    """
+    outs = []
+    for l, d in enumerate(blocks):
+        lo = max(0, l - m_max)
+        hi = min(2 * l, l + m_max)
+        xl = feats[..., l * l:(l + 1) ** 2, :]
+        outs.append(jnp.einsum("...ij,...jc->...ic",
+                               d[..., lo:hi + 1, :], xl))
+    return jnp.concatenate(outs, axis=-2)
+
+
+def apply_wigner_expand(blocks, feats_trunc, m_max: int):
+    """Rotate BACK from the truncated edge frame: y = D^T y_trunc, using
+    only the |m| <= m_max columns of each D^l (inverse of
+    apply_wigner_truncated)."""
+    outs = []
+    off = 0
+    for l, d in enumerate(blocks):
+        lo = max(0, l - m_max)
+        hi = min(2 * l, l + m_max)
+        rows = hi - lo + 1
+        yl = feats_trunc[..., off:off + rows, :]
+        off += rows
+        outs.append(jnp.einsum("...ji,...jc->...ic",
+                               d[..., lo:hi + 1, :], yl))
+    return jnp.concatenate(outs, axis=-2)
+
+
+def truncated_index(l: int, m: int, l_max: int, m_max: int) -> int:
+    """Flat index of (l, m) within the truncated layout."""
+    assert abs(m) <= min(l, m_max)
+    off = sum(min(2 * ll + 1, 2 * m_max + 1) for ll in range(l))
+    lo = max(0, l - m_max)          # first stored row is m = lo - l
+    return off + (l + m) - lo
+
+
+def rotation_matrices(axis_angles):
+    """Rodrigues: (..., 3) axis*angle -> (..., 3, 3). For tests."""
+    theta = jnp.linalg.norm(axis_angles, axis=-1, keepdims=True)
+    k = axis_angles / jnp.maximum(theta, 1e-12)
+    kx, ky, kz = k[..., 0], k[..., 1], k[..., 2]
+    zero = jnp.zeros_like(kx)
+    kmat = jnp.stack([
+        jnp.stack([zero, -kz, ky], -1),
+        jnp.stack([kz, zero, -kx], -1),
+        jnp.stack([-ky, kx, zero], -1)], -2)
+    t = theta[..., None]
+    eye = jnp.eye(3, dtype=axis_angles.dtype)
+    return eye + jnp.sin(t) * kmat + (1 - jnp.cos(t)) * (kmat @ kmat)

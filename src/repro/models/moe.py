@@ -1,0 +1,121 @@
+"""Mixture-of-Experts layer: sort-based top-k dispatch with capacity.
+
+This is the TPU-idiomatic "dropping" MoE (as used by MaxText / GShard
+successors): instead of a (tokens x experts x capacity) one-hot dispatch
+einsum — infeasible at 1M tokens x 128 experts — token assignments are
+argsorted by expert id, positioned within their expert via a first-occurrence
+subtraction (O(T k log Tk), no T x E cumsum), scattered into an
+(E x capacity x d) buffer, processed with a batched per-expert SwiGLU einsum,
+and combined back with the gate weights.  Tokens beyond an expert's capacity
+are dropped (their residual path passes through), matching reference MoE
+training semantics with capacity_factor ~ 1.25.
+
+Sharding: the expert axis maps to the `data` mesh axis (expert parallelism)
+and each expert's d_ff to `model` (tensor parallelism); the token->slot
+scatter becomes the all-to-all that EP requires.  An Arctic-style dense
+residual branch runs in parallel and is summed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.nn import core as nn
+from repro.parallel.sharding import constrain
+
+
+def init_moe(key, moe: MoEConfig, d_model: int, d_ff: int, *,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    e = moe.n_experts
+    std_in = (2.0 / d_model) ** 0.5
+    std_out = (2.0 / d_ff) ** 0.5
+
+    def w(k, shape, std):
+        return (jax.random.normal(k, shape, jnp.float32) * std).astype(dtype)
+
+    params = {
+        "router": {"w": w(ks[0], (d_model, e), std_in)},
+        "experts": {
+            "w_gate": w(ks[1], (e, d_model, d_ff), std_in),
+            "w_in": w(ks[2], (e, d_model, d_ff), std_in),
+            "w_out": w(ks[3], (e, d_ff, d_model), std_out),
+        },
+    }
+    return params
+
+
+def capacity(n_tokens: int, moe: MoEConfig) -> int:
+    c = int(n_tokens * moe.top_k * moe.capacity_factor / moe.n_experts)
+    return max(8, -(-c // 8) * 8)   # round up to 8 for tiling
+
+
+def moe_apply(params, moe: MoEConfig, x, *, compute_dtype=jnp.bfloat16,
+              activation: str = "silu"):
+    """x: (T, d) token-major. Returns (out (T, d), aux_loss scalar)."""
+    t, d = x.shape
+    e, k = moe.n_experts, moe.top_k
+    c = capacity(t, moe)
+    act = nn.ACTIVATIONS[activation]
+
+    xc = x.astype(compute_dtype)
+    router_logits = (xc @ params["router"]["w"].astype(compute_dtype)
+                     ).astype(jnp.float32)                     # (T, E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)            # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # --- load-balancing auxiliary loss (Switch eq. 4) ---
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    one_hot_top1 = jax.nn.one_hot(expert_ids[:, 0], e, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux = moe.aux_loss_weight * e * jnp.sum(me * ce)
+
+    # --- sort-based dispatch ---
+    flat_e = expert_ids.reshape(-1)                            # (T*k,)
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort_idx]
+    first_occ = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos = jnp.arange(t * k, dtype=jnp.int32) - first_occ.astype(jnp.int32)
+    keep = pos < c
+    slot = jnp.where(keep, sorted_e * c + pos, e * c)          # drop -> last
+    token_idx = (sort_idx // k).astype(jnp.int32)
+
+    buf = jnp.zeros((e * c + 1, d), compute_dtype)
+    # NB: dropped assignments all land on the sentinel row e*c, so indices
+    # are NOT unique — do not pass unique_indices here.
+    # §Perf cell B: the per-assignment gather output is constrained to the
+    # token sharding so SPMD keeps it distributed; without this the
+    # partitioner resolves the gather as partial-result + full-output
+    # all-reduce (51.5 GB/device/layer at 1M tokens x d=2048 fp32).
+    dispatched = constrain(xc[token_idx], "tokens", None)
+    buf = buf.at[slot].set(dispatched, mode="drop")
+    h = buf[: e * c].reshape(e, c, d)
+    h = constrain(h, "expert", "expert_slot", None)
+
+    # --- per-expert SwiGLU ---
+    wg = params["experts"]["w_gate"].astype(compute_dtype)
+    wi = params["experts"]["w_in"].astype(compute_dtype)
+    wo = params["experts"]["w_out"].astype(compute_dtype)
+    hg = jnp.einsum("ecd,edf->ecf", h, wg)
+    hi = jnp.einsum("ecd,edf->ecf", h, wi)
+    hmid = act(hg) * hi
+    hmid = constrain(hmid, "expert", "expert_slot", "mlp")
+    y = jnp.einsum("ecf,efd->ecd", hmid, wo)
+    y = constrain(y, "expert", "expert_slot", None)
+
+    # --- combine ---
+    y_flat = jnp.concatenate(
+        [y.reshape(e * c, d), jnp.zeros((1, d), y.dtype)], axis=0)
+    per_assign = constrain(y_flat[slot], "tokens", None)       # (T*k, d)
+    gates_sorted = gate_vals.reshape(-1)[sort_idx].astype(y.dtype)
+    # fp32 scatter-add accumulation, but the gathered payload stays in
+    # compute dtype — the weighted sum over <= top_k values is short.
+    out = jnp.zeros((t, d), jnp.float32)
+    out = out.at[token_idx].add(
+        (per_assign * gates_sorted[:, None]).astype(jnp.float32))
+    out = constrain(out, "tokens", None)
+    return out.astype(compute_dtype), aux

@@ -1,0 +1,176 @@
+"""Factorization Machine (Rendle, ICDM'10) over giant sparse embedding tables.
+
+The hot path of any recsys model is the embedding lookup.  JAX has no native
+``EmbeddingBag`` and no CSR sparse — per the assignment this substrate is
+built from ``jnp.take`` + ``jax.ops.segment_sum``:
+
+* All 39 per-field tables are concatenated into ONE row-sharded table
+  (the FBGEMM "table-batched embedding" layout) with static per-field row
+  offsets, so a batch of (B, F) ids becomes a single gather — one
+  all-to-all on a ``table_rows``-sharded mesh instead of 39.
+* ``embedding_bag`` provides the general multi-hot (ragged) reduction used
+  by bag-valued fields: gather + segment_sum/mean, the JAX EmbeddingBag.
+
+The FM pairwise interaction uses the O(nk) sum-square identity
+
+    sum_{i<j} <v_i, v_j> x_i x_j = 1/2 * sum_k [ (sum_i v_ik)^2 - sum_i v_ik^2 ]
+
+which is the paper-analogous *strength reduction*: the naive O(F^2 k)
+pairwise MMM degenerates into two reductions — same insight as LL-GNN's
+MMM elimination, applied to the FM kernel.  A Pallas version of this op
+(fused with the logit reduction) lives in repro/kernels/fm_interaction.
+
+``retrieval_score`` scores one query against N candidate items as a single
+GEMV over the candidate embedding block (never a loop), for the
+retrieval_cand cell.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.parallel.sharding import constrain
+
+
+def field_offsets(cfg: RecsysConfig) -> np.ndarray:
+    """Static row offset of each field inside the concatenated table.
+
+    int32 covers tables up to 2.1B rows; beyond that, enable x64 and bump
+    this dtype (the gather itself is dtype-agnostic).
+    """
+    sizes = np.asarray(cfg.vocab_sizes, dtype=np.int64)
+    assert sizes.shape[0] == cfg.n_sparse, (sizes.shape, cfg.n_sparse)
+    assert sizes.sum() < 2**31, "int32 row index overflow; enable x64"
+    return np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int32)
+
+
+def padded_rows(cfg: RecsysConfig, multiple: int = 1024) -> int:
+    """Table rows rounded up so row-sharding divides any production mesh
+    (512 chips); the pad rows are dead weight never indexed."""
+    return -(-cfg.total_rows // multiple) * multiple
+
+
+def init(key, cfg: RecsysConfig):
+    rows = padded_rows(cfg)
+    k1, k2 = jax.random.split(key)
+    pd = jnp.dtype(cfg.param_dtype)
+    return {
+        # factor table V: (rows, k). Init scale 1/sqrt(k) keeps the pairwise
+        # term O(1) at init.
+        "tables": {"rows": (jax.random.normal(k1, (rows, cfg.embed_dim),
+                                              jnp.float32)
+                            * (1.0 / np.sqrt(cfg.embed_dim))).astype(pd) * 0.01},
+        # linear weights w: one scalar per row (kept as a (rows, 1) column so
+        # the same row-sharding rule applies).
+        "linear": {"rows": jnp.zeros((rows, 1), pd)},
+        "bias": jnp.zeros((), pd),
+    }
+
+
+# ---------------------------------------------------------------------------
+# embedding substrate
+# ---------------------------------------------------------------------------
+
+def lookup(params, cfg: RecsysConfig, ids):
+    """ids: (B, F) per-field local ids -> (v (B, F, K), w (B, F))."""
+    offs = jnp.asarray(field_offsets(cfg))
+    flat = ids.astype(jnp.int32) + offs[None, :]
+    v = jnp.take(params["tables"]["rows"], flat, axis=0)     # (B, F, K)
+    w = jnp.take(params["linear"]["rows"], flat, axis=0)[..., 0]
+    return v, w
+
+
+def embedding_bag(table, indices, segment_ids, n_segments: int,
+                  mode: str = "sum", weights=None):
+    """JAX EmbeddingBag: ragged multi-hot lookup + per-bag reduction.
+
+    table: (rows, K); indices: (nnz,) row ids; segment_ids: (nnz,) bag id of
+    each index (sorted or not); returns (n_segments, K).
+    """
+    g = jnp.take(table, indices, axis=0)                     # (nnz, K)
+    if weights is not None:
+        g = g * weights[:, None].astype(g.dtype)
+    s = jax.ops.segment_sum(g, segment_ids, num_segments=n_segments)
+    if mode == "sum":
+        return s
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(segment_ids, dtype=g.dtype),
+                                  segment_ids, num_segments=n_segments)
+        return s / jnp.maximum(cnt, 1.0)[:, None]
+    if mode == "max":
+        m = jax.ops.segment_max(g, segment_ids, num_segments=n_segments)
+        return jnp.where(jnp.isfinite(m), m, 0.0)
+    raise ValueError(mode)
+
+
+# ---------------------------------------------------------------------------
+# FM forward
+# ---------------------------------------------------------------------------
+
+def fm_interaction(v):
+    """Sum-square strength reduction. v: (..., F, K) -> (...,) scalar term."""
+    sum_v = jnp.sum(v, axis=-2)                               # (..., K)
+    sum_sq = jnp.sum(jnp.square(v), axis=-2)                  # (..., K)
+    return 0.5 * jnp.sum(jnp.square(sum_v) - sum_sq, axis=-1)
+
+
+def forward(params, cfg: RecsysConfig, ids, *, use_kernel: bool = False,
+            interpret: bool = False):
+    """ids: (B, F) -> logits (B,)."""
+    v, w = lookup(params, cfg, ids)
+    v = constrain(v, "batch", None, None)
+    if use_kernel:
+        from repro.kernels.fm_interaction import ops as fm_ops
+        inter = fm_ops.fm_interaction(v, interpret=interpret)
+    else:
+        inter = fm_interaction(v.astype(jnp.float32))
+    linear = jnp.sum(w.astype(jnp.float32), axis=-1)
+    return linear + inter + params["bias"].astype(jnp.float32)
+
+
+def loss_fn(params, cfg: RecsysConfig, batch, **kw):
+    """Binary logistic loss. batch: {ids (B, F), y (B,) in {0,1}}."""
+    logits = forward(params, cfg, batch["ids"], **kw)
+    y = batch["y"].astype(jnp.float32)
+    # numerically stable BCE-with-logits
+    loss = jnp.mean(jnp.maximum(logits, 0) - logits * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    acc = jnp.mean(((logits > 0) == (y > 0.5)).astype(jnp.float32))
+    return loss, {"accuracy": acc}
+
+
+# ---------------------------------------------------------------------------
+# retrieval: 1 query x N candidates
+# ---------------------------------------------------------------------------
+
+def retrieval_score(params, cfg: RecsysConfig, user_ids, cand_ids):
+    """Score one query against a large candidate set, as one GEMV.
+
+    user_ids: (F,) the query's field ids; cand_ids: (N,) candidate ids in the
+    LAST field's vocabulary (the "item" field).  FM score decomposes as
+
+        s(u, c) = const(u) + w_c + <sum_f v_f(u), v_c>
+
+    so scoring N candidates is a (N, K) @ (K,) matvec — never a loop.
+    """
+    offs = jnp.asarray(field_offsets(cfg))
+    u_rows = user_ids.astype(jnp.int32) + offs[:-1]           # user fields
+    vu = jnp.take(params["tables"]["rows"], u_rows, axis=0)   # (F-1, K)
+    wu = jnp.take(params["linear"]["rows"], u_rows, axis=0)[..., 0]
+
+    vu32 = vu.astype(jnp.float32)
+    q = jnp.sum(vu32, axis=0)                                 # (K,) query vec
+    const_u = (jnp.sum(wu.astype(jnp.float32))
+               + fm_interaction(vu32)
+               + params["bias"].astype(jnp.float32))
+
+    c_rows = cand_ids.astype(jnp.int32) + offs[-1]
+    vc = jnp.take(params["tables"]["rows"], c_rows, axis=0)   # (N, K)
+    vc = constrain(vc, "candidates", None)
+    wc = jnp.take(params["linear"]["rows"], c_rows, axis=0)[..., 0]
+    scores = vc.astype(jnp.float32) @ q + wc.astype(jnp.float32) + const_u
+    return constrain(scores, "candidates")

@@ -1,0 +1,349 @@
+"""Decoder-only LM family: dense + MoE, GQA, RoPE, SWA, scan-over-layers.
+
+Covers the five assigned LM architectures (arctic-480b, moonshot-v1-16b-a3b,
+h2o-danube-1.8b, minicpm-2b, phi3-medium-14b) from one implementation:
+
+* pre-RMSNorm blocks, RoPE GQA attention (sliding-window for h2o-danube),
+  SwiGLU FFN or sort-based MoE (+ Arctic's parallel dense residual FFN);
+* layers are scan-stacked (one compiled block regardless of depth — critical
+  for dry-run compile times at 512 fake devices) with optional per-layer
+  remat for training;
+* three entry points matching the assigned input shapes:
+    - ``forward``      : train / prefill logits (+ KV cache on request)
+    - ``init_cache``   : allocate a (possibly rolling) KV cache
+    - ``decode_step``  : one-token serve step against the cache.
+
+Sharding: activations are annotated with logical axes (batch->data[,pod],
+seq->model i.e. sequence parallelism on the residual stream, heads->model
+inside attention, d_ff->model in the FFN); weights follow PARAM_RULES
+(TP over `model` + FSDP over `data`).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TransformerConfig
+from repro.models import moe as moe_lib
+from repro.nn import core as nn
+from repro.nn.attention import attention
+from repro.nn.rope import apply_rope, rope_cos_sin
+from repro.parallel.sharding import constrain
+
+
+def padded_vocab(cfg: TransformerConfig, multiple: int = 256) -> int:
+    return -(-cfg.vocab_size // multiple) * multiple
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: TransformerConfig):
+    d, hd = cfg.d_model, cfg.head_dim_
+    n_q, n_kv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 8)
+    pd = jnp.dtype(cfg.param_dtype)
+
+    def w(k, shape, fan_in):
+        std = (2.0 / fan_in) ** 0.5
+        return {"w": (jax.random.normal(k, shape, jnp.float32) * std).astype(pd)}
+
+    layer = {
+        "attn_norm": nn.rmsnorm_init(d, dtype=pd),
+        "attn": {
+            "wq": w(ks[0], (d, n_q * hd), d),
+            "wk": w(ks[1], (d, n_kv * hd), d),
+            "wv": w(ks[2], (d, n_kv * hd), d),
+            "wo": w(ks[3], (n_q * hd, d), n_q * hd),
+        },
+        "ffn_norm": nn.rmsnorm_init(d, dtype=pd),
+    }
+    if cfg.moe is not None:
+        layer["moe"] = moe_lib.init_moe(ks[4], cfg.moe, d, cfg.d_ff, dtype=pd)
+        if cfg.moe.dense_residual:
+            layer["ffn"] = {
+                "w_gate": w(ks[5], (d, cfg.d_ff), d),
+                "w_in": w(ks[6], (d, cfg.d_ff), d),
+                "w_out": w(ks[7], (cfg.d_ff, d), cfg.d_ff),
+            }
+    else:
+        layer["ffn"] = {
+            "w_gate": w(ks[5], (d, cfg.d_ff), d),
+            "w_in": w(ks[6], (d, cfg.d_ff), d),
+            "w_out": w(ks[7], (cfg.d_ff, d), cfg.d_ff),
+        }
+    return layer
+
+
+def init(key, cfg: TransformerConfig):
+    km, kl, kh = jax.random.split(key, 3)
+    pd = jnp.dtype(cfg.param_dtype)
+    v = padded_vocab(cfg)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    # scan-stacked layer params: every leaf gains a leading n_layers axis.
+    layers = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    params = {
+        "embed": {"w": (jax.random.normal(km, (v, cfg.d_model), jnp.float32)
+                        * 0.02).astype(pd)},
+        "layers": layers,
+        "final_norm": nn.rmsnorm_init(cfg.d_model, dtype=pd),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": (jax.random.normal(kh, (cfg.d_model, v),
+                                                     jnp.float32)
+                                   * 0.02).astype(pd)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _attn_block(lp, cfg: TransformerConfig, h, q_pos, *, cache=None,
+                kv_chunk=None, q_chunk=None):
+    """h: (B, S, d) -> (attn_out, kv).
+
+    Without a cache: self-attention over h's own (rope'd) keys; kv is the
+    (k, v) pair for prefill cache building.  With ``cache = (k_cache,
+    v_cache, slot_pos, write_idx)``: writes this step's k/v into the cache
+    slot and attends over the full cache (decode path); kv is the updated
+    cache pair.
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, s, d = h.shape
+    hd, n_q, n_kv = cfg.head_dim_, cfg.n_heads, cfg.n_kv_heads
+
+    x = nn.rmsnorm_apply(lp["attn_norm"], h)
+    q = nn.dense_apply(lp["attn"]["wq"], x, compute_dtype=cdt)
+    k = nn.dense_apply(lp["attn"]["wk"], x, compute_dtype=cdt)
+    v = nn.dense_apply(lp["attn"]["wv"], x, compute_dtype=cdt)
+    q = q.reshape(b, s, n_q, hd)
+    k = k.reshape(b, s, n_kv, hd)
+    v = v.reshape(b, s, n_kv, hd)
+
+    cos, sin = rope_cos_sin(q_pos, hd, cfg.rope_theta, dtype=jnp.float32)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+
+    if cache is not None:
+        k_cache, v_cache, slot_pos, write_idx = cache
+        bidx = jnp.arange(b)
+        k_all = k_cache.at[bidx, write_idx].set(k[:, 0].astype(k_cache.dtype))
+        v_all = v_cache.at[bidx, write_idx].set(v[:, 0].astype(v_cache.dtype))
+        kv_pos, kv_out = slot_pos, (k_all, v_all)
+    else:
+        k_all, v_all, kv_pos, kv_out = k, v, q_pos, (k, v)
+
+    o = attention(q, k_all, v_all, q_pos=q_pos, kv_pos=kv_pos,
+                  causal=True, window=cfg.sliding_window,
+                  kv_chunk=kv_chunk, q_chunk=q_chunk,
+                  unroll=cfg.unroll_scans)
+    o = constrain(o, "batch", None, "heads", None)
+    out = nn.dense_apply(lp["attn"]["wo"], o.reshape(b, s, n_q * hd),
+                         compute_dtype=cdt)
+    return out, kv_out
+
+
+def _dense_ffn(lp, cfg: TransformerConfig, x):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    act = nn.ACTIVATIONS[cfg.activation]
+    g = nn.dense_apply(lp["w_gate"], x, compute_dtype=cdt)
+    u = nn.dense_apply(lp["w_in"], x, compute_dtype=cdt)
+    mid = act(g) * u
+    mid = constrain(mid, "batch", None, "mlp")
+    return nn.dense_apply(lp["w_out"], mid, compute_dtype=cdt)
+
+
+def _layer_fn(lp, cfg: TransformerConfig, h, q_pos, *, cache=None,
+              kv_chunk=None, q_chunk=None):
+    """One transformer block. Returns (h, kv, aux_loss)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    attn_out, kv = _attn_block(lp, cfg, h, q_pos, cache=cache,
+                               kv_chunk=kv_chunk, q_chunk=q_chunk)
+    h = h + attn_out
+    h = constrain(h, "batch", "seq", None)
+
+    x = nn.rmsnorm_apply(lp["ffn_norm"], h)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        b, s, d = x.shape
+        xt = x.reshape(b * s, d)
+        xt = constrain(xt, "tokens", None)
+        y, aux = moe_lib.moe_apply(lp["moe"], cfg.moe, xt, compute_dtype=cdt,
+                                   activation=cfg.activation)
+        y = y.reshape(b, s, d)
+        if cfg.moe.dense_residual:
+            y = y + _dense_ffn(lp["ffn"], cfg, x)
+    else:
+        y = _dense_ffn(lp["ffn"], cfg, x)
+    h = h + y.astype(h.dtype)
+    h = constrain(h, "batch", "seq", None)
+    return h, kv, aux
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: TransformerConfig, tokens, *, return_cache=False,
+            kv_chunk=2048, q_chunk=None):
+    """tokens: (B, S) int32 -> logits (B, S, vocab_padded) [+ cache]."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    out = forward_hidden(params, cfg, tokens, return_cache=return_cache,
+                         kv_chunk=kv_chunk, q_chunk=q_chunk)
+    h = out[0]
+    logits = h @ _head_weight(params, cfg, cdt)
+    logits = constrain(logits, "tokens", None, None)
+    if return_cache:
+        return logits, out[1], out[2]
+    return logits, out[1]
+
+
+def forward_hidden(params, cfg: TransformerConfig, tokens, *,
+                   return_cache=False, kv_chunk=2048, q_chunk=None):
+    """tokens: (B, S) int32 -> (h (B, S, d), aux_loss [, cache])."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, s = tokens.shape
+    h = jnp.take(params["embed"]["w"], tokens, axis=0).astype(cdt)
+    h = constrain(h, "batch", "seq", None)
+    q_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(h, lp):
+        out, kv_new, aux = _layer_fn(lp, cfg, h, q_pos,
+                                     kv_chunk=kv_chunk, q_chunk=q_chunk)
+        return out, (kv_new if return_cache else None, aux)
+
+    if cfg.remat == "layer":
+        body = jax.checkpoint(body)
+
+    h, (cache_kv, aux) = jax.lax.scan(
+        body, h, params["layers"],
+        unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    h = nn.rmsnorm_apply(params["final_norm"], h)
+    aux_total = jnp.sum(aux)
+    if return_cache:
+        k_stack, v_stack = cache_kv                     # (L, B, S, n_kv, hd)
+        cache = {"k": k_stack, "v": v_stack,
+                 "pos": jnp.full((b,), s, jnp.int32)}
+        return h, aux_total, cache
+    return h, aux_total
+
+
+def _head_weight(params, cfg: TransformerConfig, cdt):
+    w = (params["embed"]["w"].T if cfg.tie_embeddings
+         else params["lm_head"]["w"])
+    return w.astype(cdt)
+
+
+def _chunk_nll(h_chunk, labels_chunk, head_w):
+    """CE for one (B, sc, d) hidden chunk without keeping fp32 logits."""
+    logits = (h_chunk @ head_w).astype(jnp.float32)     # (B, sc, V)
+    logits = constrain(logits, "tokens", None, None)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels_chunk, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels_chunk >= 0).astype(jnp.float32)
+    return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+
+def loss_fn(params, cfg: TransformerConfig, batch, *, kv_chunk=2048,
+            q_chunk=None, logit_chunk=None):
+    """Next-token cross-entropy; labels = batch["labels"] (B, S), -1 ignored.
+
+    ``logit_chunk`` streams the LM head + CE over sequence chunks so the
+    (B, S, V) fp32 logits never materialize — at vocab 100k and 1M tokens
+    that tensor is ~400 GB fp32, the single largest activation of the train
+    cells.  Each chunk is remat'd (logits recomputed in backward), trading
+    one extra head GEMM for the memory.
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    h, aux = forward_hidden(params, cfg, batch["tokens"],
+                            kv_chunk=kv_chunk, q_chunk=q_chunk)
+    labels = batch["labels"]
+    head_w = _head_weight(params, cfg, cdt)
+    b, s = labels.shape
+
+    if logit_chunk is None or s <= logit_chunk:
+        nll_sum, n_tok = _chunk_nll(h, labels, head_w)
+    else:
+        assert s % logit_chunk == 0, (s, logit_chunk)
+        nc = s // logit_chunk
+        h_c = jnp.moveaxis(
+            h.reshape(b, nc, logit_chunk, h.shape[-1]), 1, 0)
+        l_c = jnp.moveaxis(labels.reshape(b, nc, logit_chunk), 1, 0)
+
+        def body(carry, xs):
+            hh, ll = xs
+            ns, nt = jax.checkpoint(_chunk_nll)(hh, ll, head_w)
+            return (carry[0] + ns, carry[1] + nt), None
+
+        (nll_sum, n_tok), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (h_c, l_c), unroll=nc if cfg.unroll_scans else 1)
+
+    loss = nll_sum / jnp.maximum(n_tok, 1.0)
+    return loss + aux, {"nll": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: cache + decode
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg: TransformerConfig, max_seq: int) -> int:
+    """Rolling window for SWA archs — the sub-quadratic long-context path."""
+    if cfg.sliding_window is not None:
+        return min(max_seq, cfg.sliding_window)
+    return max_seq
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int,
+               dtype=None):
+    t = cache_len(cfg, max_seq)
+    dt = jnp.dtype(dtype or cfg.compute_dtype)
+    shape = (cfg.n_layers, batch, t, cfg.n_kv_heads, cfg.head_dim_)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        # absolute position of each slot's entry; -1 = empty
+        "slot_pos": jnp.full((batch, t), -1, jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),     # next position to write
+    }
+
+
+def decode_step(params, cfg: TransformerConfig, cache, tokens):
+    """One greedy decode step. tokens: (B,) int32 -> (logits (B, V), cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b = tokens.shape[0]
+    t = cache["k"].shape[2]
+    cur = cache["pos"]                                  # (B,)
+    write_idx = cur % t                                 # rolling for SWA
+    h = jnp.take(params["embed"]["w"], tokens[:, None], axis=0).astype(cdt)
+    h = constrain(h, "batch", None, None)
+    q_pos = cur[:, None]
+
+    new_slot_pos = cache["slot_pos"].at[jnp.arange(b), write_idx].set(cur)
+
+    def body(h, xs):
+        lp, k_c, v_c = xs
+        out, (k_new, v_new), _ = _layer_fn(
+            lp, cfg, h, q_pos,
+            cache=(k_c, v_c, new_slot_pos, write_idx))
+        return out, (k_new, v_new)
+
+    h, (k_upd, v_upd) = jax.lax.scan(
+        body, h, (params["layers"], cache["k"], cache["v"]),
+        unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    h = nn.rmsnorm_apply(params["final_norm"], h)
+    head_w = (params["embed"]["w"].T if cfg.tie_embeddings
+              else params["lm_head"]["w"])
+    logits = (h @ head_w.astype(cdt))[:, 0, :]
+    new_cache = {"k": k_upd, "v": v_upd, "slot_pos": new_slot_pos,
+                 "pos": cur + 1}
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,25 @@
+from repro.nn.core import (
+    ACTIVATIONS,
+    dense_init,
+    dense_apply,
+    mlp_init,
+    mlp_apply,
+    mlp_dims,
+    rmsnorm_init,
+    rmsnorm_apply,
+    layernorm_init,
+    layernorm_apply,
+)
+
+__all__ = [
+    "ACTIVATIONS",
+    "dense_init",
+    "dense_apply",
+    "mlp_init",
+    "mlp_apply",
+    "mlp_dims",
+    "rmsnorm_init",
+    "rmsnorm_apply",
+    "layernorm_init",
+    "layernorm_apply",
+]

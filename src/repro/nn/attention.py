@@ -1,0 +1,132 @@
+"""Attention: GQA grouped-head attention with causal / sliding-window masks.
+
+Two execution paths, numerically identical:
+
+* full     — one einsum, softmax over the whole KV axis.  Used for decode
+  (q_len == 1) and short sequences.
+* blockwise — lax.scan over KV chunks with an online-softmax carry
+  (running max / denominator / accumulator), optionally also mapping over
+  query chunks.  This is FlashAttention's tiling expressed at the XLA level:
+  the (Sq x Skv) score matrix never materializes, which is what makes the
+  prefill_32k and train_4k cells fit HBM.  (A Pallas flash-decode kernel for
+  the KV-cache-bound serving path lives in repro/kernels/flash_decode.)
+
+Masking is positional: callers pass integer positions for q and kv; invalid
+KV slots (unwritten cache entries) carry position -1 and are masked out.
+Sliding-window attention (h2o-danube) adds `q_pos - kv_pos < window`.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask_bias(q_pos, kv_pos, *, causal: bool, window):
+    """(B, Sq, Skv) additive bias from positional masking rules."""
+    qp = q_pos[..., :, None].astype(jnp.int32)
+    kp = kv_pos[..., None, :].astype(jnp.int32)
+    ok = kp >= 0                                   # valid cache slot
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= (qp - kp) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _scores(q, k, scale):
+    # q: (B, Sq, Hkv, G, D)  k: (B, Skv, Hkv, D) -> (B, Hkv, G, Sq, Skv)
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _attend_full(q, k, v, bias):
+    s = _scores(q, k, 1.0)                          # scale pre-applied to q
+    s = s + bias[:, None, None, :, :]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.maximum(m, NEG_INF / 2)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    l = jnp.moveaxis(l, (1, 2, 3), (2, 3, 1))       # (B, Sq, Hkv, G, 1)
+    return (o / jnp.maximum(l, 1e-30)).astype(v.dtype)
+
+
+def _attend_blockwise(q, k, v, bias, kv_chunk: int, unroll: bool = False):
+    b, sq, hkv, g, d = q.shape
+    skv = k.shape[1]
+    n_chunks = -(-skv // kv_chunk)
+    pad = n_chunks * kv_chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bias = jnp.pad(bias, ((0, 0), (0, 0), (0, pad)),
+                       constant_values=NEG_INF)
+    k = k.reshape(b, n_chunks, kv_chunk, hkv, d)
+    v = v.reshape(b, n_chunks, kv_chunk, hkv, d)
+    bias = bias.reshape(b, sq, n_chunks, kv_chunk)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kc, vc, bc = xs                              # (B,C,Hkv,D), (B,Sq,C)
+        s = _scores(q, kc, 1.0) + bc[:, None, None, :, :]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    # scan over the chunk axis (moved to front)
+    xs = (jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+          jnp.moveaxis(bias, 2, 0))
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), xs,
+                                  unroll=n_chunks if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, (1, 2), (2, 3)).astype(v.dtype)  # (B,Sq,Hkv,G,D)
+
+
+def attention(q, k, v, *, q_pos, kv_pos, causal: bool = True,
+              window=None, kv_chunk=None, q_chunk=None,
+              unroll: bool = False):
+    """Grouped-query attention.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, Hkv, D); H % Hkv == 0.
+    q_pos: (B, Sq) int32; kv_pos: (B, Skv) int32, -1 for invalid slots.
+    Returns (B, Sq, H, D).
+    """
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    assert h % hkv == 0, (h, hkv)
+    g = h // hkv
+    scale = 1.0 / (d ** 0.5)
+    qg = (q * scale).reshape(b, sq, hkv, g, d)
+
+    def run(qg_, qpos_):
+        bias = _mask_bias(qpos_, kv_pos, causal=causal, window=window)
+        if kv_chunk is not None and k.shape[1] > kv_chunk:
+            o = _attend_blockwise(qg_, k, v, bias, kv_chunk, unroll=unroll)
+        else:
+            o = _attend_full(qg_, k, v, bias)
+        return o
+
+    if q_chunk is not None and sq > q_chunk and sq % q_chunk == 0:
+        nq = sq // q_chunk
+        qg_c = jnp.moveaxis(qg.reshape(b, nq, q_chunk, hkv, g, d), 1, 0)
+        qp_c = jnp.moveaxis(q_pos.reshape(b, nq, q_chunk), 1, 0)
+        _, o = jax.lax.scan(lambda _c, xs: (None, run(*xs)), None,
+                            (qg_c, qp_c), unroll=nq if unroll else 1)
+        o = jnp.moveaxis(o, 0, 1).reshape(b, sq, hkv, g, d)
+    else:
+        o = run(qg, q_pos)
+    return o.reshape(b, sq, h, d)

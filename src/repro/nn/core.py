@@ -1,0 +1,122 @@
+"""Minimal NN substrate: linear / MLP / norms as pure functions over dict pytrees.
+
+Conventions
+-----------
+* Parameters are stored in fp32 (`param_dtype`) and cast to `compute_dtype`
+  (usually bf16 on TPU) at use — the standard mixed-precision recipe.
+* A Linear is ``{"w": (in, out), "b": (out,)}``; activations act on the last
+  axis.  Everything is shape-polymorphic on leading batch axes.
+* Matmul always contracts the LAST axis of the input with the FIRST axis of
+  the weight — i.e. features live contiguously in the minor-most dimension.
+  This is the TPU analogue of the paper's "column-major order" (Sec. 3.2):
+  the per-node / per-edge feature vectors that the JEDI-net MLPs consume are
+  contiguous, so the MXU sees one large (rows x features) GEMM instead of a
+  strided gather.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def _selu(x):
+    return jax.nn.selu(x)
+
+
+ACTIVATIONS = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "selu": _selu,
+    "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
+    "identity": lambda x: x,
+}
+
+
+def dense_init(key, in_dim: int, out_dim: int, *, dtype=jnp.float32, scale: str = "fan_in",
+               use_bias: bool = True):
+    """He/LeCun-style variance-scaling init."""
+    if scale == "fan_in":
+        std = math.sqrt(2.0 / in_dim)
+    elif scale == "lecun":
+        std = math.sqrt(1.0 / in_dim)
+    elif scale == "fan_avg":
+        std = math.sqrt(2.0 / (in_dim + out_dim))
+    else:
+        raise ValueError(f"unknown init scale {scale}")
+    w = jax.random.normal(key, (in_dim, out_dim), dtype=jnp.float32) * std
+    p = {"w": w.astype(dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((out_dim,), dtype=dtype)
+    return p
+
+
+def dense_apply(p, x, *, compute_dtype=None):
+    w = p["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    y = x @ w
+    if "b" in p:
+        b = p["b"].astype(y.dtype)
+        y = y + b
+    return y
+
+
+def mlp_dims(in_dim: int, hidden: Sequence[int], out_dim: int) -> list:
+    """Layer (in, out) dims for an MLP with the given hidden sizes."""
+    dims = [in_dim, *hidden, out_dim]
+    return list(zip(dims[:-1], dims[1:]))
+
+
+def mlp_init(key, in_dim: int, hidden: Sequence[int], out_dim: int, *,
+             dtype=jnp.float32, scale: str = "fan_in"):
+    layers = []
+    dims = mlp_dims(in_dim, hidden, out_dim)
+    keys = jax.random.split(key, len(dims))
+    for k, (din, dout) in zip(keys, dims):
+        layers.append(dense_init(k, din, dout, dtype=dtype, scale=scale))
+    return {"layers": layers}
+
+
+def mlp_apply(p, x, *, activation: str = "relu", final_activation: str = "identity",
+              compute_dtype=None):
+    """Apply an MLP: activation between layers, `final_activation` at the end."""
+    act = ACTIVATIONS[activation]
+    fact = ACTIVATIONS[final_activation]
+    layers = p["layers"]
+    for i, lp in enumerate(layers):
+        x = dense_apply(lp, x, compute_dtype=compute_dtype)
+        x = act(x) if i < len(layers) - 1 else fact(x)
+    return x
+
+
+def rmsnorm_init(dim: int, *, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm_apply(p, x, *, eps: float = 1e-6):
+    orig_dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(orig_dtype)
+
+
+def layernorm_init(dim: int, *, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype=dtype), "bias": jnp.zeros((dim,), dtype=dtype)}
+
+
+def layernorm_apply(p, x, *, eps: float = 1e-5):
+    orig_dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(orig_dtype)

@@ -1,0 +1,30 @@
+"""Rotary position embeddings (llama rotate-half convention)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_cos_sin(positions, head_dim: int, theta: float = 10000.0,
+                 dtype=jnp.float32):
+    """cos/sin tables for given integer positions.
+
+    positions: (..., S) int32 -> cos/sin: (..., S, head_dim//2)
+    """
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, H, D); cos/sin: (..., S, D//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    xc = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out1 = x1f * c - x2f * s
+    out2 = x2f * c + x1f * s
+    return jnp.concatenate([out1, out2], axis=-1).astype(xc)

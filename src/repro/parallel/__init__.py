@@ -1,0 +1,13 @@
+from repro.parallel.sharding import (
+    axis_rules,
+    constrain,
+    current_mesh,
+    logical_to_spec,
+    param_shardings,
+    DEFAULT_RULES,
+)
+
+__all__ = [
+    "axis_rules", "constrain", "current_mesh", "logical_to_spec",
+    "param_shardings", "DEFAULT_RULES",
+]

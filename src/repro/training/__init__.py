@@ -1,0 +1,10 @@
+from repro.training import schedule, optimizer, trainer, grad_compression
+from repro.training.optimizer import make_optimizer, Optimizer
+from repro.training.schedule import SCHEDULES
+from repro.training.trainer import init_state, make_train_step
+
+__all__ = [
+    "schedule", "optimizer", "trainer", "grad_compression",
+    "make_optimizer", "Optimizer", "SCHEDULES", "init_state",
+    "make_train_step",
+]

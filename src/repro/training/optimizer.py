@@ -1,0 +1,169 @@
+"""Optimizers as (init, update) pure-function pairs over dict pytrees.
+
+Built from scratch (no optax per the project brief).  Three optimizers:
+
+* ``sgd``       — momentum SGD (GNN full-graph baselines).
+* ``adamw``     — decoupled weight decay Adam; fp32 m/v states.
+* ``adafactor`` — factored second moments (row/col running means) for
+  matrix-shaped leaves, full second moment for vectors/scalars.  This is
+  what makes the arctic-480b train cell *fit*: AdamW's fp32 m/v would need
+  2 x 4 bytes x 479B params = 3.8 TB of optimizer state; Adafactor's
+  factored accumulators are O(rows + cols) per matrix (~MB-scale), the
+  standard memory-side distributed-training trade (Shazeer & Stern,
+  arXiv:1804.04235).
+
+All updates take grads in any float dtype, compute in fp32, and return
+param deltas applied in the params' own dtype.  Gradient clipping by global
+norm is part of ``update`` so the clip happens AFTER cross-data-parallel
+gradient averaging (the psum lives in the train step, not here).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.tree import global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable    # (grads, state, params, step) -> (new_params, new_state, metrics)
+    name: str = ""
+
+
+def _clip_tree(grads, clip_norm):
+    gn = global_norm(grads)
+    if clip_norm is None:
+        scale = jnp.asarray(1.0, jnp.float32)
+    else:
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-12))
+    g32 = jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.float32) * scale, grads)
+    return g32, gn
+
+
+def sgd(lr_fn, momentum: float = 0.9, clip_norm: Optional[float] = 1.0,
+        weight_decay: float = 0.0):
+    def init(params):
+        return {"mu": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        g32, gn = _clip_tree(grads, clip_norm)
+        lr = lr_fn(step)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g, state["mu"], g32)
+        new_params = jax.tree_util.tree_map(
+            lambda p, m: (p.astype(jnp.float32)
+                          - lr * (m + weight_decay * p.astype(jnp.float32))
+                          ).astype(p.dtype),
+            params, mu)
+        return new_params, {"mu": mu}, {"grad_norm": gn, "lr": lr}
+
+    return Optimizer(init, update, "sgd")
+
+
+def adamw(lr_fn, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01, clip_norm: Optional[float] = 1.0):
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params, step):
+        g32, gn = _clip_tree(grads, clip_norm)
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - jnp.power(b1, t)
+        bc2 = 1.0 - jnp.power(b2, t)
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], g32)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g), state["v"], g32)
+
+        def upd(p, m_, v_):
+            mh = m_ / bc1
+            vh = v_ / bc2
+            step_ = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, m, v)
+        return new_params, {"m": m, "v": v}, {"grad_norm": gn, "lr": lr}
+
+    return Optimizer(init, update, "adamw")
+
+
+def adafactor(lr_fn, decay: float = 0.8, eps: float = 1e-30,
+              clip_norm: Optional[float] = 1.0, weight_decay: float = 0.0,
+              min_dim_factored: int = 128):
+    """Factored Adafactor (no momentum), per Shazeer & Stern.
+
+    Matrix leaves with both trailing dims >= min_dim_factored get factored
+    row/col accumulators; everything else keeps a full second moment.
+    Leading axes (e.g. scan-stacked layer axis, MoE expert axis) are kept in
+    the factored shapes.
+    """
+
+    def _factored(p) -> bool:
+        return (p.ndim >= 2 and p.shape[-1] >= min_dim_factored
+                and p.shape[-2] >= min_dim_factored)
+
+    def init(params):
+        def st(p):
+            if _factored(p):
+                return {
+                    "r": jnp.zeros(p.shape[:-1], jnp.float32),        # row
+                    "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"acc": jax.tree_util.tree_map(
+            st, params, is_leaf=lambda x: hasattr(x, "shape"))}
+
+    def update(grads, state, params, step):
+        g32, gn = _clip_tree(grads, clip_norm)
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        # increasing decay schedule: beta2_t = 1 - t^-decay
+        b2t = 1.0 - jnp.power(t, -decay)
+
+        def upd(p, g, acc):
+            g2 = jnp.square(g) + eps
+            if "r" in acc:
+                r = b2t * acc["r"] + (1 - b2t) * jnp.mean(g2, axis=-1)
+                c = b2t * acc["c"] + (1 - b2t) * jnp.mean(g2, axis=-2)
+                # v_hat = outer(r, c) / mean(r)
+                rmean = jnp.mean(r, axis=-1, keepdims=True)
+                vhat = (r / jnp.maximum(rmean, eps))[..., None] * c[..., None, :]
+                new_acc = {"r": r, "c": c}
+            else:
+                vhat = b2t * acc["v"] + (1 - b2t) * g2
+                new_acc = {"v": vhat}
+            u = g * jax.lax.rsqrt(vhat + eps)
+            # update clipping (RMS <= 1), per the paper
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms)
+            newp = (p.astype(jnp.float32)
+                    - lr * (u + weight_decay * p.astype(jnp.float32)))
+            return newp.astype(p.dtype), new_acc
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(g32)
+        flat_a = treedef.flatten_up_to(state["acc"])
+        out = [upd(p, g, a) for p, g, a in zip(flat_p, flat_g, flat_a)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_acc = treedef.unflatten([o[1] for o in out])
+        return new_params, {"acc": new_acc}, {"grad_norm": gn, "lr": lr}
+
+    return Optimizer(init, update, "adafactor")
+
+
+OPTIMIZERS = {"sgd": sgd, "adamw": adamw, "adafactor": adafactor}
+
+
+def make_optimizer(name: str, lr_fn, **kw) -> Optimizer:
+    return OPTIMIZERS[name](lr_fn, **kw)

@@ -1,0 +1,58 @@
+"""Learning-rate schedules (pure functions step -> lr).
+
+Includes WSD (warmup-stable-decay) from MiniCPM [arXiv:2404.06395] — the
+training-side feature of the assigned minicpm-2b arch — plus the standard
+warmup-cosine and constant schedules.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def f(step):
+        return jnp.asarray(lr, jnp.float32)
+    return f
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return f
+
+
+def wsd(lr: float, warmup_steps: int, total_steps: int,
+        decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup -> stable plateau -> short exponential-ish decay (MiniCPM).
+
+    decay starts at (1 - decay_frac) * total_steps; within the decay phase
+    lr falls geometrically to final_frac * lr.
+    """
+    decay_start = int(total_steps * (1.0 - decay_frac))
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - decay_start) / jnp.maximum(total_steps - decay_start, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        decay = lr * jnp.power(final_frac, t)
+        stable = jnp.asarray(lr, jnp.float32)
+        out = jnp.where(step < warmup_steps, warm,
+                        jnp.where(step < decay_start, stable, decay))
+        return out
+    return f
+
+
+SCHEDULES = {
+    "constant": constant,
+    "warmup_cosine": warmup_cosine,
+    "wsd": wsd,
+}

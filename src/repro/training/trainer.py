@@ -1,0 +1,84 @@
+"""Train-step builder: grad accumulation, mixed precision, pjit-ready.
+
+``make_train_step(loss_fn, optimizer)`` returns a pure
+``step(state, batch) -> (state, metrics)`` suitable for ``jax.jit`` with
+in/out shardings.  Featured:
+
+* **Gradient accumulation** — ``grad_accum > 1`` splits the batch's leading
+  axis into microbatches and lax.scan's over them, so the train_4k cells
+  can trade activation memory for steps without touching model code.
+* **Mixed precision** — loss_fn handles bf16 compute internally; grads are
+  accumulated in fp32.
+* **Data parallelism by sharding** — the batch axis is sharded over
+  (pod, data); XLA inserts the gradient all-reduce automatically from the
+  sharding propagation, overlapping it with the backward pass (the
+  standard XLA latency-hiding scheduler behaviour) — no explicit pmean.
+
+The trainer state is a plain dict so the checkpoint module can shard/save
+it without special cases.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import Optimizer
+
+
+def init_state(key, init_params_fn: Callable, optimizer: Optimizer):
+    params = init_params_fn(key)
+    return {
+        "params": params,
+        "opt": optimizer.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_train_step(loss_fn: Callable, optimizer: Optimizer, *,
+                    grad_accum: int = 1):
+    """loss_fn(params, batch) -> (scalar loss, metrics dict)."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        grads = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32), grads)
+        return loss, metrics, grads
+
+    def step(state, batch):
+        params = state["params"]
+        if grad_accum == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            def micro(b):
+                return jax.tree_util.tree_map(
+                    lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum,
+                                        *x.shape[1:]), b)
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                loss, metrics, grads = grads_of(params, mb)
+                acc = jax.tree_util.tree_map(jnp.add, acc, grads)
+                return (acc, loss_acc + loss), metrics
+
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), metrics = jax.lax.scan(
+                body, (zero, jnp.zeros((), jnp.float32)), micro(batch))
+            grads = jax.tree_util.tree_map(
+                lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+            metrics = jax.tree_util.tree_map(
+                lambda m: jnp.mean(m), metrics)
+
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, state["opt"], params, state["step"])
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        out_metrics = {"loss": loss, **metrics, **opt_metrics}
+        return new_state, out_metrics
+
+    return step

@@ -1,0 +1,196 @@
+"""Data pipeline + training substrate tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import graphs, jets, lm_data, recsys_data
+from repro.data.neighbor_sampler import (
+    CSRGraph, minibatch_stream, sample_subgraph, static_budget)
+from repro.training import make_optimizer, init_state, make_train_step
+from repro.training.schedule import SCHEDULES, warmup_cosine, wsd
+
+
+# --- neighbor sampler --------------------------------------------------------
+
+def test_csr_neighbors_are_real_neighbors(rng):
+    n, e = 50, 300
+    s = rng.randint(0, n, e).astype(np.int32)
+    r = rng.randint(0, n, e).astype(np.int32)
+    csr = CSRGraph(n, s, r)
+    adj = {i: set() for i in range(n)}
+    for a, b in zip(s, r):
+        adj[int(a)].add(int(b))
+    nodes = np.arange(n, dtype=np.int32)
+    nb = csr.sample_neighbors(rng, nodes, 7)
+    for i in range(n):
+        for x in nb[i]:
+            if adj[i]:
+                assert int(x) in adj[i], (i, x)
+            else:
+                assert int(x) == i          # isolated -> self
+
+
+def test_subgraph_edges_are_valid(rng):
+    n, e = 200, 2000
+    g = graphs.community_graph(0, n, e, 16, n_classes=4)
+    csr = CSRGraph(n, g["senders"], g["receivers"])
+    seeds = rng.choice(n, 16, replace=False).astype(np.int32)
+    mn, me = static_budget(16, (5, 3))
+    sub = sample_subgraph(csr, rng, seeds, (5, 3), g["x"], g["y"], mn, me)
+    assert sub["x"].shape == (mn, 16)
+    em = sub["edge_mask"]
+    # valid edges index real (non-pad) nodes
+    n_sub = int(sub["n_nodes"])
+    assert np.all(sub["senders"][em] < n_sub)
+    assert np.all(sub["receivers"][em] < n_sub)
+    # all seeds present with labels
+    assert sub["seed_mask"].sum() == 16
+    assert np.all(sub["y"][sub["seed_mask"]] >= 0)
+
+
+def test_minibatch_stream_fixed_shapes():
+    g = graphs.community_graph(1, 500, 5000, 8, n_classes=3)
+    it = minibatch_stream(0, g, batch_nodes=32, fanout=(4, 3))
+    a = next(it)
+    b = next(it)
+    assert a["x"].shape == b["x"].shape
+    assert a["senders"].shape == b["senders"].shape
+    assert not np.array_equal(a["y"], b["y"])     # different batches
+
+
+# --- generators --------------------------------------------------------------
+
+def test_jets_shapes_and_classes(rng):
+    x, y = jets.make_jets(rng, 64, 30)
+    assert x.shape == (64, 30, 16) and y.shape == (64,)
+    assert set(np.unique(y)) <= set(range(5))
+    assert np.all(np.isfinite(x))
+
+
+def test_lm_bigram_is_learnable_structure(rng):
+    t = lm_data.make_tokens(rng, 8, 64, vocab=100, branching=4)
+    # each (prev, next) pair must come from the fixed bigram table
+    nexts = lm_data._bigram_table(100, 4)
+    for b in range(8):
+        for i in range(1, 64):
+            assert t[b, i] in nexts[t[b, i - 1]]
+
+
+def test_ctr_labels_correlate_with_planted_rule():
+    it = recsys_data.ctr_batches(0, 4096, (50, 40, 30))
+    b = next(it)
+    assert b["ids"].shape == (4096, 3)
+    assert 0.1 < b["y"].mean() < 0.9      # non-degenerate
+
+
+# --- schedules ---------------------------------------------------------------
+
+def test_warmup_cosine_shape():
+    f = warmup_cosine(1.0, 10, 100)
+    assert float(f(0)) == 0.0
+    assert float(f(10)) == pytest.approx(1.0, rel=1e-5)
+    assert float(f(100)) == pytest.approx(0.1, rel=1e-2)
+    assert float(f(55)) < 1.0
+
+
+def test_wsd_three_phases():
+    f = wsd(1.0, 10, 100, decay_frac=0.2)
+    assert float(f(5)) == pytest.approx(0.5, rel=1e-5)     # warmup
+    assert float(f(50)) == pytest.approx(1.0, rel=1e-6)    # stable
+    assert float(f(79)) == pytest.approx(1.0, rel=1e-6)    # still stable
+    assert float(f(100)) == pytest.approx(0.01, rel=1e-2)  # decayed
+    # decay is monotone
+    vals = [float(f(s)) for s in range(80, 101)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+# --- optimizers --------------------------------------------------------------
+
+@pytest.mark.parametrize("name,lr", [("sgd", 0.02), ("adamw", 0.1),
+                                     ("adafactor", 0.1)])
+def test_optimizer_reduces_quadratic(name, lr):
+    from repro.training.schedule import constant
+    opt = make_optimizer(name, constant(lr))
+    target = jnp.asarray(np.random.RandomState(0).normal(0, 1, (16, 16)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((16, 16))}
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+
+    def loss(p, _):
+        # sum (not mean) keeps gradient scale O(1) for momentum SGD
+        return jnp.sum(jnp.square(p["w"] - target)), {}
+
+    step = jax.jit(make_train_step(loss, opt))
+    l0 = None
+    for i in range(150):
+        state, m = step(state, {})
+        l0 = l0 if l0 is not None else float(m["loss"])
+    assert float(m["loss"]) < 0.1 * l0
+
+
+def test_adafactor_memory_is_sublinear():
+    """Factored accumulators: state for a (512, 512) matrix is O(n) not
+    O(n^2)."""
+    from repro.training.schedule import constant
+    opt = make_optimizer("adafactor", constant(1e-3))
+    params = {"w": jnp.zeros((512, 512))}
+    st = opt.init(params)
+    n_state = sum(np.prod(l.shape) for l in
+                  jax.tree_util.tree_leaves(st))
+    assert n_state == 1024              # r (512) + c (512)
+
+
+def test_grad_accum_equivalence():
+    from repro.training.schedule import constant
+    opt = make_optimizer("adamw", constant(1e-2))
+    target = jnp.asarray(np.random.RandomState(0).normal(0, 1, (8,)),
+                         jnp.float32)
+
+    def loss(p, b):
+        pred = b["x"] @ p["w"]
+        return jnp.mean(jnp.square(pred - b["x"] @ target)), {}
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+    params = {"w": jnp.zeros((8,))}
+    s1 = {"params": params, "opt": opt.init(params),
+          "step": jnp.zeros((), jnp.int32)}
+    s2 = jax.tree_util.tree_map(lambda a: a, s1)
+    step1 = jax.jit(make_train_step(loss, opt))
+    step4 = jax.jit(make_train_step(loss, opt, grad_accum=4))
+    s1, m1 = step1(s1, {"x": x})
+    s2, m2 = step4(s2, {"x": x})
+    np.testing.assert_allclose(np.asarray(s1["params"]["w"]),
+                               np.asarray(s2["params"]["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+# --- checkpoint --------------------------------------------------------------
+
+def test_checkpoint_atomicity_and_retention(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    cm = CheckpointManager(str(tmp_path), keep_last=2)
+    tree = {"a": jnp.arange(10), "b": [jnp.ones((2, 2)),
+                                       {"c": jnp.zeros(3)}]}
+    for s in (1, 2, 3, 4):
+        cm.save(s, tree)
+    assert cm.all_steps() == [3, 4]
+    restored, step = cm.restore()
+    assert step == 4
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.arange(10))
+    np.testing.assert_array_equal(np.asarray(restored["b"][1]["c"]),
+                                  np.zeros(3))
+
+
+def test_checkpoint_async_then_sync(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    cm = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.ones((128, 128))}
+    cm.save_async(10, tree)
+    cm.wait()
+    r, s = cm.restore()
+    assert s == 10
+    assert float(r["w"].sum()) == 128 * 128

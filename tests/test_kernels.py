@@ -1,0 +1,142 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp ref.py oracles
+(interpret=True executes the kernel body on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import interaction_net as inet
+from repro.kernels.fused_jedinet import ops as fj_ops
+from repro.kernels.fused_jedinet.ref import fused_edge_block_ref
+from repro.kernels.flash_decode import ops as fd_ops
+from repro.kernels.flash_decode.ref import flash_decode_ref
+from repro.kernels.fm_interaction import ops as fm_ops
+from repro.kernels.fm_interaction.ref import fm_interaction_ref
+
+
+# --- fused jedinet edge block ------------------------------------------------
+
+@pytest.mark.parametrize("n_o,p,fr_hidden,d_e,batch", [
+    (4, 3, (), 5, 4),             # no hidden layer (J-style NL=1 is (8,))
+    (8, 6, (10,), 4, 6),
+    (30, 16, (20, 20, 20), 8, 4),  # paper 30p
+    (50, 16, (8, 8), 8, 2),        # paper U4
+    (13, 5, (16, 12), 7, 8),       # odd sizes
+])
+def test_fused_edge_block_sweep(n_o, p, fr_hidden, d_e, batch):
+    cfg = inet.JediNetConfig(n_objects=n_o, n_features=p, d_e=d_e,
+                             fr_hidden=fr_hidden)
+    params = inet.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, n_o, p))
+    ref = fused_edge_block_ref(params["fr"], cfg, x)
+    got = fj_ops.fused_edge_block(params["fr"], cfg, x, interpret=True)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_edge_block_dtypes(dtype):
+    cfg = inet.JediNetConfig(n_objects=8, n_features=6, d_e=4,
+                             fr_hidden=(10,))
+    params = inet.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 6)).astype(dtype)
+    ref = fused_edge_block_ref(params["fr"], cfg, x.astype(jnp.float32))
+    got = fj_ops.fused_edge_block(params["fr"], cfg, x, interpret=True)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
+                               rtol=tol, atol=tol)
+
+
+def test_fused_edge_block_batch_tiling():
+    """Different block_b tilings give identical results."""
+    cfg = inet.JediNetConfig(n_objects=10, n_features=4, d_e=3,
+                             fr_hidden=(8,))
+    params = inet.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (12, 10, 4))
+    outs = [fj_ops.fused_edge_block(params["fr"], cfg, x, interpret=True,
+                                    block_b=bb) for bb in (1, 3, 4, 12)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-6)
+
+
+# --- flash decode ------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,hkv,d,s,chunk", [
+    (2, 4, 4, 32, 256, 64),       # MHA (G=1)
+    (4, 8, 2, 64, 512, 128),      # GQA
+    (1, 16, 1, 128, 1024, 256),   # MQA
+])
+def test_flash_decode_sweep(b, h, hkv, d, s, chunk):
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, hkv, d))
+    q_pos = jnp.asarray(np.random.RandomState(3).randint(1, s, b), jnp.int32)
+    kv_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    kv_pos = jnp.where(kv_pos <= q_pos[:, None], kv_pos, -1)
+    got = fd_ops.flash_decode(q, k, v, q_pos, kv_pos, chunk=chunk,
+                              interpret=True)
+    scale = 1.0 / np.sqrt(d)
+    ref = flash_decode_ref((q.astype(jnp.float32) * scale)
+                           .reshape(b, hkv, h // hkv, d),
+                           k, v, q_pos, kv_pos).reshape(b, h, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_decode_sliding_window():
+    b, h, hkv, d, s = 2, 4, 2, 32, 256
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, hkv, d))
+    q_pos = jnp.asarray([200, 255], jnp.int32)
+    kv_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    got = fd_ops.flash_decode(q, k, v, q_pos, kv_pos, window=64, chunk=64,
+                              interpret=True)
+    scale = 1.0 / np.sqrt(d)
+    ref = flash_decode_ref((q.astype(jnp.float32) * scale)
+                           .reshape(b, hkv, h // hkv, d),
+                           k, v, q_pos, kv_pos,
+                           window=64).reshape(b, h, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_decode_bf16_cache():
+    """Serving caches are bf16; accumulation must stay fp32-stable."""
+    b, h, hkv, d, s = 2, 4, 2, 32, 128
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, hkv, d))
+    q_pos = jnp.full((b,), s - 1, jnp.int32)
+    kv_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    got = fd_ops.flash_decode(q, k.astype(jnp.bfloat16),
+                              v.astype(jnp.bfloat16), q_pos, kv_pos,
+                              chunk=64, interpret=True)
+    scale = 1.0 / np.sqrt(d)
+    ref = flash_decode_ref((q.astype(jnp.float32) * scale)
+                           .reshape(b, hkv, h // hkv, d),
+                           k, v, q_pos, kv_pos).reshape(b, h, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=5e-2, atol=5e-2)
+
+
+# --- fm interaction ----------------------------------------------------------
+
+@pytest.mark.parametrize("b,f,k", [(8, 5, 4), (16, 39, 10), (64, 26, 16)])
+def test_fm_interaction_sweep(b, f, k):
+    v = jax.random.normal(jax.random.PRNGKey(0), (b, f, k))
+    got = fm_ops.fm_interaction(v, interpret=True)
+    ref = fm_interaction_ref(v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_fm_interaction_equals_naive_pairwise():
+    v = jax.random.normal(jax.random.PRNGKey(1), (4, 6, 3))
+    naive = sum(jnp.sum(v[:, i] * v[:, j], -1)
+                for i in range(6) for j in range(i + 1, 6))
+    got = fm_ops.fm_interaction(v, interpret=True)
+    np.testing.assert_allclose(np.asarray(naive), np.asarray(got),
+                               rtol=1e-4, atol=1e-5)

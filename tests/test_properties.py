@@ -1,0 +1,162 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import adjacency
+from repro.models.gnn import segment_ops as seg
+from repro.models.gnn import so3
+
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# --- adjacency strength reduction -------------------------------------------
+
+@given(st.integers(min_value=2, max_value=40))
+def test_edge_maps_cover_all_offdiagonal_pairs(n):
+    recv, send = adjacency.edge_index_maps(n)
+    pairs = set(zip(recv.tolist(), send.tolist()))
+    assert len(pairs) == n * (n - 1)
+    assert all(r != s for r, s in pairs)
+    # receiver-major: edges of receiver i are contiguous
+    assert np.all(np.diff(recv) >= 0)
+
+
+@given(st.integers(min_value=2, max_value=12),
+       st.integers(min_value=1, max_value=6))
+def test_sr_b_matrix_equals_dense_product(n, p):
+    """B1/B2 via strength reduction == I @ Rr / I @ Rs for random I."""
+    from repro.core.interaction_net import JediNetConfig, build_b_matrix
+    rng = np.random.RandomState(n * 7 + p)
+    x = jnp.asarray(rng.normal(0, 1, (1, n, p)).astype(np.float32))
+    cfg = JediNetConfig(n_objects=n, n_features=p)
+    b = np.asarray(build_b_matrix(cfg, x)[0])          # (N_E, 2P)
+    rr, rs = adjacency.dense_relation_matrices(n)
+    i_mat = np.asarray(x[0]).T                         # (P, N_o)
+    b1 = (i_mat @ rr).T
+    b2 = (i_mat @ rs).T
+    np.testing.assert_allclose(b[:, :p], b1, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(b[:, p:], b2, rtol=1e-5, atol=1e-6)
+
+
+# --- segment ops -------------------------------------------------------------
+
+@st.composite
+def _segments(draw):
+    n = draw(st.integers(min_value=1, max_value=10))
+    e = draw(st.integers(min_value=0, max_value=40))
+    ids = draw(st.lists(st.integers(min_value=0, max_value=n - 1),
+                        min_size=e, max_size=e))
+    return n, np.asarray(ids, np.int32)
+
+
+@given(_segments())
+def test_segment_sum_is_linear_and_complete(args):
+    n, ids = args
+    rng = np.random.RandomState(len(ids))
+    m = jnp.asarray(rng.normal(0, 1, (len(ids), 3)).astype(np.float32))
+    s = seg.scatter_sum(m, jnp.asarray(ids), n)
+    # total mass conservation
+    np.testing.assert_allclose(np.asarray(s).sum(0), np.asarray(m).sum(0),
+                               rtol=1e-4, atol=1e-4)
+    # linearity
+    s2 = seg.scatter_sum(2.0 * m, jnp.asarray(ids), n)
+    np.testing.assert_allclose(np.asarray(s2), 2 * np.asarray(s),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(_segments())
+def test_segment_mean_max_min_bounds(args):
+    n, ids = args
+    if len(ids) == 0:
+        return
+    rng = np.random.RandomState(len(ids) + 1)
+    m = jnp.asarray(rng.normal(0, 1, (len(ids),)).astype(np.float32))
+    mean = np.asarray(seg.scatter_mean(m, jnp.asarray(ids), n))
+    mx = np.asarray(seg.scatter_max(m, jnp.asarray(ids), n))
+    mn = np.asarray(seg.scatter_min(m, jnp.asarray(ids), n))
+    present = np.bincount(ids, minlength=n) > 0
+    assert np.all(mn[present] <= mean[present] + 1e-5)
+    assert np.all(mean[present] <= mx[present] + 1e-5)
+    # empty segments are exactly 0, never +-inf
+    assert np.all(np.isfinite(mx)) and np.all(np.isfinite(mn))
+    assert np.all(mx[~present] == 0) and np.all(mn[~present] == 0)
+
+
+@given(_segments())
+def test_segment_softmax_normalizes(args):
+    n, ids = args
+    if len(ids) == 0:
+        return
+    rng = np.random.RandomState(len(ids) + 2)
+    scores = jnp.asarray(rng.normal(0, 3, (len(ids),)).astype(np.float32))
+    p = seg.segment_softmax(scores, jnp.asarray(ids), n)
+    sums = np.asarray(seg.scatter_sum(p, jnp.asarray(ids), n))
+    present = np.bincount(ids, minlength=n) > 0
+    np.testing.assert_allclose(sums[present], 1.0, rtol=1e-4, atol=1e-4)
+    assert np.all(np.asarray(p) >= 0)
+
+
+# --- FM strength reduction ---------------------------------------------------
+
+@given(st.integers(min_value=2, max_value=10),
+       st.integers(min_value=1, max_value=8),
+       st.integers(min_value=1, max_value=6))
+def test_fm_sum_square_identity(f, k, b):
+    from repro.models.recsys import fm_interaction
+    rng = np.random.RandomState(f * 31 + k)
+    v = jnp.asarray(rng.normal(0, 1, (b, f, k)).astype(np.float32))
+    naive = sum(jnp.sum(v[:, i] * v[:, j], -1)
+                for i in range(f) for j in range(i + 1, f))
+    fast = fm_interaction(v)
+    np.testing.assert_allclose(np.asarray(naive), np.asarray(fast),
+                               rtol=2e-4, atol=2e-4)
+
+
+# --- SO(3) equivariance ------------------------------------------------------
+
+@given(st.integers(min_value=0, max_value=3),
+       st.integers(min_value=0, max_value=100))
+def test_wigner_rotation_consistency(l_max, seed):
+    """Y(R r) == D(R) Y(r) for the J-matrix fast path (align-to-z)."""
+    rng = np.random.RandomState(seed)
+    d = rng.normal(0, 1, 3)
+    d = d / np.linalg.norm(d)
+    dirs = jnp.asarray(d[None, :].astype(np.float32))
+    blocks = so3.wigner_align_z(l_max, dirs)
+    y = so3.real_sph_harm(l_max, dirs)                  # (1, K)
+    # rotated SH: direction becomes +z
+    z = jnp.asarray(np.array([[0.0, 0.0, 1.0]], np.float32))
+    y_z = so3.real_sph_harm(l_max, z)
+    got = so3.apply_wigner(blocks, y[..., None])[..., 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(y_z),
+                               rtol=2e-3, atol=2e-3)
+
+
+@given(st.integers(min_value=0, max_value=60))
+def test_wigner_blocks_orthogonal(seed):
+    rng = np.random.RandomState(seed)
+    d = rng.normal(0, 1, 3)
+    d = d / np.linalg.norm(d)
+    blocks = so3.wigner_align_z(3, jnp.asarray(d[None, :].astype(np.float32)))
+    for l, blk in enumerate(blocks):
+        m = np.asarray(blk[0])
+        np.testing.assert_allclose(m @ m.T, np.eye(2 * l + 1),
+                                   rtol=1e-3, atol=1e-3)
+
+
+# --- quantization round trip --------------------------------------------------
+
+@given(st.integers(min_value=0, max_value=50))
+def test_quantize_error_bound(seed):
+    from repro.training.grad_compression import quantize, dequantize
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.normal(0, rng.uniform(0.01, 10),
+                               (64,)).astype(np.float32))
+    q, scale = quantize(x, bits=8)
+    err = np.abs(np.asarray(dequantize(q, scale) - x))
+    assert err.max() <= float(scale) * 0.5 + 1e-7     # half-ulp bound
