@@ -1,0 +1,97 @@
+"""Fused-path trajectory benchmark: per-path wall-clock + modeled HBM bytes.
+
+Measures every FORWARD_FNS path on the paper's 30p / 50p configs and pairs
+each wall-clock with the TPUModel's modeled HBM traffic at its fusion
+level ("none" for the XLA paths, "edge" for the edge-only kernel, "full"
+for the whole-network kernel).  ``run()`` also fills a machine-readable
+payload that ``benchmarks/run.py`` writes to ``BENCH_fused.json`` so the
+perf trajectory is tracked across PRs.
+
+Pallas paths run in interpret mode off-TPU: their wall-clock is a CPU
+emulation (flagged ``"interpret": true`` in the JSON) — the HBM model is
+the cross-PR comparable number there, exactly as in bench_fusion.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.core import codesign, interaction_net as inet
+
+# forward-path name -> TPUModel fusion level
+PATH_LEVELS = {
+    "dense": "none",
+    "sr": "none",
+    "sr_split": "none",
+    "fused": "edge",
+    "fused_full": "full",
+}
+
+_INTERPRET_PATHS = ("fused", "fused_full")
+
+# filled by run(); benchmarks/run.py serializes it to BENCH_fused.json
+JSON_PAYLOAD: dict = {}
+
+
+def _measure(name, params, cfg, x, interpret: bool):
+    if name in _INTERPRET_PATHS:
+        call = jax.jit(lambda p, x_: inet.FORWARD_FNS[name](
+            p, cfg, x_, interpret=interpret))
+    else:
+        call = jax.jit(lambda p, x_: inet.FORWARD_FNS[name](p, cfg, x_))
+    iters = 3 if interpret else 10
+    us = time_fn(call, params, x, warmup=1, iters=iters)
+    return us
+
+
+def run():
+    on_tpu = jax.default_backend() == "tpu"
+    rows = []
+    payload = {"schema": 1, "backend": jax.default_backend(), "configs": {}}
+
+    for cname, n_o, batch, ibatch in (("30p", 30, 256, 16),
+                                      ("50p", 50, 128, 8)):
+        cfg = inet.JediNetConfig(n_objects=n_o, n_features=16)
+        params = inet.init(jax.random.PRNGKey(0), cfg, scale="lecun")
+        entry = {"n_objects": n_o, "paths": {}}
+
+        for name, level in PATH_LEVELS.items():
+            interpret = (name in _INTERPRET_PATHS) and not on_tpu
+            b = ibatch if interpret else batch
+            x = jax.random.normal(jax.random.PRNGKey(1), (b, n_o, 16))
+            us = _measure(name, params, cfg, x, interpret)
+            hbm = codesign.TPUModel.hbm_bytes(cfg, batch, 2, fused=level)
+            entry["paths"][name] = {
+                "wall_us": us,
+                "batch": b,
+                "interpret": interpret,
+                "fused_level": level,
+                "modeled_hbm_bytes": hbm,
+                "modeled_hbm_batch": batch,
+            }
+            rows.append(row(
+                f"fused_paths_{cname}_{name}", us,
+                f"level={level} modeled_hbm={hbm / 1e6:.2f}MB"
+                f"{' (interpret)' if interpret else ''}"))
+
+        # equivalence check rides along so the JSON records correctness too
+        xq = jax.random.normal(jax.random.PRNGKey(2), (8, n_o, 16))
+        sr = inet.forward_sr(params, cfg, xq)
+        full = inet.forward_fused_full(params, cfg, xq,
+                                       interpret=not on_tpu)
+        err = float(jnp.max(jnp.abs(sr - full)))
+        entry["fused_full_max_abs_err_vs_sr"] = err
+        rows.append(row(f"fused_paths_{cname}_allclose", 0.0,
+                        f"max_err {err:.1e}"))
+        payload["configs"][cname] = entry
+
+    JSON_PAYLOAD.clear()
+    JSON_PAYLOAD.update(payload)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

@@ -21,8 +21,9 @@ def run():
     for name, n_o in (("30p", 30), ("50p", 50)):
         cfg = inet.JediNetConfig(n_objects=n_o, n_features=16)
         pt = codesign.TPUDesignPoint(cfg=cfg, batch=1024)
-        unfused = codesign.TPUModel.evaluate(pt, fused=False)
-        fused = codesign.TPUModel.evaluate(pt, fused=True)
+        unfused = codesign.TPUModel.evaluate(pt, fused="none")
+        fused = codesign.TPUModel.evaluate(pt, fused="edge")
+        full = codesign.TPUModel.evaluate(pt, fused="full")
         saved = unfused["hbm_bytes"] - fused["hbm_bytes"]
         rows.append(row(
             f"fig10_fusion_hbm_{name}", fused["step_us"],
@@ -33,11 +34,18 @@ def run():
             f"({unfused['step_us']/fused['step_us']:.2f}x; paper J2->J3: "
             f"3.1x)"))
         rows.append(row(
+            f"fig10_fusion_full_{name}", full["step_us"],
+            f"whole-network kernel: HBM {fused['hbm_bytes']/1e6:.2f}MB->"
+            f"{full['hbm_bytes']/1e6:.2f}MB per 1024-batch; "
+            f"step {fused['step_us']:.2f}->{full['step_us']:.2f}us"))
+        rows.append(row(
             f"fig10_bound_{name}", 0.0,
-            f"unfused bound={unfused['bound']}, fused bound={fused['bound']}"
-            f", arithmetic intensity {unfused['arithmetic_intensity']:.0f}"
-            f"->{fused['arithmetic_intensity']:.0f} flops/byte"))
-    # sanity: fused path == sr path numerically (interpret mode)
+            f"bound none={unfused['bound']}, edge={fused['bound']}, "
+            f"full={full['bound']}; arithmetic intensity "
+            f"{unfused['arithmetic_intensity']:.0f}->"
+            f"{fused['arithmetic_intensity']:.0f}->"
+            f"{full['arithmetic_intensity']:.0f} flops/byte"))
+    # sanity: fused paths == sr path numerically (interpret mode)
     cfg = inet.JediNetConfig(n_objects=30, n_features=16)
     params = inet.init(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (64, 30, 16))
@@ -45,6 +53,10 @@ def run():
     fz = inet.forward_fused(params, cfg, x, interpret=True)
     err = float(jax.numpy.max(jax.numpy.abs(sr - fz)))
     rows.append(row("fig10_fused_allclose", 0.0, f"max_err {err:.1e}"))
+    ff = inet.forward_fused_full(params, cfg, x[:16], interpret=True)
+    err_full = float(jax.numpy.max(jax.numpy.abs(sr[:16] - ff)))
+    rows.append(row("fig10_fused_full_allclose", 0.0,
+                    f"max_err {err_full:.1e}"))
     return rows
 
 

@@ -3,11 +3,16 @@
     PYTHONPATH=src python -m benchmarks.run [--only fig8,table2,...]
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
+When the ``fused_paths`` benchmark runs, its per-path wall-clock +
+modeled-HBM payload is also written to ``BENCH_fused.json`` (override
+with ``--json-out``) so the perf trajectory is machine-trackable
+across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -21,6 +26,7 @@ BENCHES = {
     "fig11_codesign": "benchmarks.bench_codesign",
     "table3_throughput": "benchmarks.bench_throughput",
     "roofline_summary": "benchmarks.bench_roofline_summary",
+    "fused_paths": "benchmarks.bench_fused_full",
 }
 
 
@@ -28,22 +34,31 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark keys")
+    ap.add_argument("--json-out", default="BENCH_fused.json",
+                    help="where to write the fused_paths JSON payload")
     args = ap.parse_args()
     keys = args.only.split(",") if args.only else list(BENCHES)
 
     import importlib
     all_rows = []
     failed = []
+    json_payload = None
     for k in keys:
         try:
             mod = importlib.import_module(BENCHES[k])
             all_rows.extend(mod.run())
+            if k == "fused_paths":
+                json_payload = dict(mod.JSON_PAYLOAD)
         except Exception as e:  # noqa: BLE001
             failed.append(k)
             traceback.print_exc()
             all_rows.append({"name": f"{k}_FAILED", "us_per_call": 0.0,
                              "derived": str(e)})
     print_rows(all_rows)
+    if json_payload is not None:
+        with open(args.json_out, "w") as f:
+            json.dump(json_payload, f, indent=2, sort_keys=True)
+        print(f"\nwrote {args.json_out}", file=sys.stderr)
     if failed:
         print(f"\nFAILED: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -146,16 +146,26 @@ class TPUModel:
         f += cfg.d_e * n_e
         return f * batch
 
+    # Fusion levels of the three forward paths (normalizes the legacy bools):
+    #   "none" — unfused strength-reduced path: B and E round-trip to HBM.
+    #   "edge" — edge-only Pallas kernel: B/E stay in VMEM, but Ebar and O
+    #            still cross the kernel/XLA boundary through HBM.
+    #   "full" — whole-network kernel: weights + x in, logits out; NO
+    #            intermediate touches HBM.
+    FUSED_LEVELS = {False: "none", True: "edge",
+                    "none": "none", "edge": "edge", "full": "full"}
+
     @staticmethod
     def hbm_bytes(cfg: JediNetConfig, batch: int, compute_bytes: int,
-                  fused: bool = True) -> float:
+                  fused: bool | str = "edge") -> float:
         """HBM traffic: weights once per step + activation round-trips.
 
-        With the fused kernel, B and E stay in VMEM; without fusion they
-        round-trip to HBM (this is what the fused-vs-unfused §Perf iteration
-        measures).
+        ``fused`` is a :data:`FUSED_LEVELS` key; the legacy booleans map to
+        "edge" / "none".  Each level removes one tier of activation traffic
+        (this is what the fused-vs-unfused §Perf iteration measures).
         """
         from repro.nn.core import mlp_dims
+        level = TPUModel.FUSED_LEVELS[fused]
         cfgs = [
             mlp_dims(2 * cfg.n_features, list(cfg.fr_hidden), cfg.d_e),
             mlp_dims(cfg.n_features + cfg.d_e, list(cfg.fo_hidden), cfg.d_o),
@@ -165,15 +175,17 @@ class TPUModel:
         traffic = w * compute_bytes
         n_e, n_o = cfg.n_edges, cfg.n_objects
         act = n_o * cfg.n_features                     # input
-        act += n_o * cfg.d_e                           # Ebar
-        act += n_o * cfg.d_o + cfg.n_targets           # O + logits
-        if not fused:
+        act += cfg.n_targets                           # logits
+        if level in ("none", "edge"):
+            act += n_o * cfg.d_e                       # Ebar kernel<->XLA
+            act += n_o * cfg.d_o                       # O
+        if level == "none":
             act += 2 * (n_e * 2 * cfg.n_features)      # B write + read
             act += 2 * (n_e * cfg.d_e)                 # E write + read
         return traffic + act * batch * compute_bytes
 
     @classmethod
-    def evaluate(cls, pt: TPUDesignPoint, fused: bool = True) -> dict:
+    def evaluate(cls, pt: TPUDesignPoint, fused: bool | str = "edge") -> dict:
         fl = cls.flops(pt.cfg, pt.batch)
         by = cls.hbm_bytes(pt.cfg, pt.batch, pt.compute_bytes, fused=fused)
         t_c = fl / (pt.chips * TPU_V5E_BF16_FLOPS)
@@ -186,6 +198,7 @@ class TPUModel:
             "step_us": max(t_c, t_m) * 1e6,
             "bound": "compute" if t_c >= t_m else "memory",
             "arithmetic_intensity": fl / by,
+            "fused_level": cls.FUSED_LEVELS[fused],
         }
 
 
@@ -232,6 +245,7 @@ def explore(base: JediNetConfig,
             dsp_slack: float = 1.0,
             accuracy_proxy: Callable[[JediNetConfig], float] | None = None,
             max_candidates: int | None = None,
+            fused_level: bool | str = "full",
             **space_kw) -> dict:
     """Run the co-design DSE.
 
@@ -261,7 +275,9 @@ def explore(base: JediNetConfig,
         if fpga["latency_us"] > alpha * latency_budget_us:
             n_pruned_lat += 1
             continue
-        tpu = TPUModel.evaluate(TPUDesignPoint(cfg=cfg))
+        # model the best available kernel (the whole-network fusion) by
+        # default; pass fused_level="edge"/"none" to study the others.
+        tpu = TPUModel.evaluate(TPUDesignPoint(cfg=cfg), fused=fused_level)
         survivors.append(Candidate(cfg=cfg, n_fr=n_fr, r_fo=r_fo,
                                    fpga=fpga, tpu=tpu))
 

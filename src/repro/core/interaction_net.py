@@ -15,6 +15,11 @@ Three functionally identical forward paths are provided:
   the (N_E x D_e) edge-message matrix E never round-trips through HBM.
   This is the TPU analogue of removing the ping-pong buffers between
   coarse-grained pipeline stages.
+* ``forward_fused_full`` — fusion extended end-to-end: ONE Pallas kernel
+  computes x -> logits (f_R grid, aggregation, f_O, node-sum, phi_O) per
+  batch tile, so the only HBM traffic is weights + x in and logits out —
+  the TPU analogue of the paper's fully-fused layer-wise architecture
+  where every stage hand-off is an on-chip stream.
 
 Layout convention: inputs are (batch, N_o, P) node-major, i.e. each node's
 feature vector is contiguous (minor-most) — the TPU translation of the
@@ -63,12 +68,19 @@ class JediNetConfig:
         return dataclasses.replace(self, **kw)
 
 
-def init(key, cfg: JediNetConfig):
+def init(key, cfg: JediNetConfig, *, scale: str = "fan_in"):
+    """``scale``: variance-scaling rule (see nn.dense_init).  "lecun" keeps
+    activations O(1) through the N_o-way message sums of an untrained net —
+    useful for numerics tests where He init would blow logits up ~N_o-fold.
+    """
     kfr, kfo, kphi = jax.random.split(key, 3)
     return {
-        "fr": nn.mlp_init(kfr, 2 * cfg.n_features, cfg.fr_hidden, cfg.d_e),
-        "fo": nn.mlp_init(kfo, cfg.n_features + cfg.d_e, cfg.fo_hidden, cfg.d_o),
-        "phi": nn.mlp_init(kphi, cfg.d_o, cfg.phi_hidden, cfg.n_targets),
+        "fr": nn.mlp_init(kfr, 2 * cfg.n_features, cfg.fr_hidden, cfg.d_e,
+                          scale=scale),
+        "fo": nn.mlp_init(kfo, cfg.n_features + cfg.d_e, cfg.fo_hidden,
+                          cfg.d_o, scale=scale),
+        "phi": nn.mlp_init(kphi, cfg.d_o, cfg.phi_hidden, cfg.n_targets,
+                           scale=scale),
     }
 
 
@@ -193,6 +205,23 @@ def forward_fused(params, cfg: JediNetConfig, x, *, interpret: bool = False):
     return logits.astype(jnp.float32)
 
 
+def forward_fused_full(params, cfg: JediNetConfig, x, *,
+                       interpret: bool = False):
+    """JEDI-net forward as ONE whole-network Pallas kernel (x -> logits).
+
+    Extends the Sec 3.5 fusion to every sub-layer: bilinear-split f_R,
+    dense-grid aggregation, f_O, the node-sum and phi_O all execute in a
+    single kernel per batch tile, so no intermediate (B, E, Ebar, C, O)
+    ever touches HBM — only weights + x in, logits out.  The MXU compute
+    dtype follows ``cfg.compute_dtype`` with fp32 accumulation (the
+    precision/latency co-design knob).  See kernels/fused_jedinet/
+    full_kernel.py and EXPERIMENTS.md §Perf.
+    """
+    from repro.kernels.fused_jedinet import ops as fused_ops
+
+    return fused_ops.fused_forward_full(params, cfg, x, interpret=interpret)
+
+
 # ---------------------------------------------------------------------------
 # Beyond-paper optimized path (pure XLA; see EXPERIMENTS.md §Perf).
 # ---------------------------------------------------------------------------
@@ -256,6 +285,7 @@ FORWARD_FNS = {
     "sr": forward_sr,
     "sr_split": forward_sr_split,
     "fused": forward_fused,
+    "fused_full": forward_fused_full,
 }
 
 

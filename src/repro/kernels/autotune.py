@@ -1,0 +1,69 @@
+"""Shared VMEM batch-tile autotuning helpers for batch-gridded kernels.
+
+Model-agnostic pieces used by every kernel package that grids over the
+batch axis only (fused_jedinet, fm_interaction): pick a batch tile from
+a per-sample VMEM working set, and pad non-divisible batches to the
+tile instead of degrading the tile.  Per-kernel working-set estimators
+stay with their kernels (e.g. fused_jedinet/autotune.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Half of the ~16 MB/core VMEM: the other half covers Mosaic's
+# input/output double buffering and the broadcast weight blocks.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+# fp32 sublane count — tiles that are a multiple of this pack the
+# (8, 128) native tile exactly when the batch axis lands on a sublane.
+_SUBLANE = 8
+
+
+def mlp_widths(params) -> list[int]:
+    """Output widths of each layer of a ``{"layers": [{"w", "b"}, ...]}`` MLP."""
+    return [int(lp["w"].shape[-1]) for lp in params["layers"]]
+
+
+def pick_block_b(batch: int, per_sample_bytes: int,
+                 budget_bytes: int = VMEM_BUDGET_BYTES) -> int:
+    """Largest useful batch tile whose working set fits the VMEM budget.
+
+    Never constrained to divide ``batch`` — pad with :func:`pad_batch`
+    instead.  Three cases:
+
+    * whole batch fits the budget -> one grid step, zero padding;
+    * otherwise take the budget-limited grid-step count and BALANCE the
+      tile to it (``ceil(batch / steps)``), which minimizes padded rows
+      for that step count (e.g. B=256 at budget-tile 96: 3 steps of 88
+      pads 8 rows, vs 3 steps of 96 padding 32);
+    * sublane-align the balanced tile when that still fits the budget.
+    """
+    bb = max(1, min(batch, budget_bytes // max(per_sample_bytes, 1)))
+    if bb >= batch:
+        return batch
+    steps = -(-batch // bb)
+    bb = -(-batch // steps)
+    if bb > _SUBLANE:
+        aligned = -(-bb // _SUBLANE) * _SUBLANE
+        if aligned * per_sample_bytes <= budget_bytes:
+            bb = aligned
+    return bb
+
+
+def padded_batch(batch: int, block_b: int) -> int:
+    """``batch`` rounded up to the next multiple of ``block_b``."""
+    return ((batch + block_b - 1) // block_b) * block_b
+
+
+def pad_batch(x, block_b: int):
+    """Zero-pad axis 0 of ``x`` up to the next ``block_b`` multiple.
+
+    Returns the (possibly aliased) padded array; callers slice kernel
+    output back to ``x.shape[0]`` rows.
+    """
+    pad = padded_batch(x.shape[0], block_b) - x.shape[0]
+    if pad == 0:
+        return x
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths)

@@ -29,6 +29,7 @@ def _fm_kernel(v_ref, o_ref):
 def fm_interaction_kernel_call(v, *, block_b: int, interpret: bool = False):
     """v: (B, F, K) -> (B,) float32; B % block_b == 0."""
     bsz, f, k = v.shape
+    assert bsz % block_b == 0, (bsz, block_b)
     grid = (bsz // block_b,)
     out = pl.pallas_call(
         _fm_kernel,

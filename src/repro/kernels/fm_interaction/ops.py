@@ -6,19 +6,15 @@ from functools import partial
 
 import jax
 
+from repro.kernels import autotune
 from repro.kernels.fm_interaction import kernel as K
-
-
-def _pick_block_b(bsz: int, f: int, k: int) -> int:
-    budget = 8 * 1024 * 1024
-    bb = max(1, min(bsz, budget // max(f * k * 4, 1)))
-    while bsz % bb:
-        bb -= 1
-    return bb
 
 
 @partial(jax.jit, static_argnames=("interpret", "block_b"))
 def fm_interaction(v, *, interpret: bool = False, block_b: int | None = None):
     """v: (B, F, K) per-field embeddings -> (B,) pairwise-interaction term."""
-    bb = block_b or _pick_block_b(*v.shape)
-    return K.fm_interaction_kernel_call(v, block_b=bb, interpret=interpret)
+    bsz, f, k = v.shape
+    bb = block_b or autotune.pick_block_b(bsz, f * k * 4)
+    vp = autotune.pad_batch(v, bb)
+    return K.fm_interaction_kernel_call(vp, block_b=bb,
+                                        interpret=interpret)[:bsz]

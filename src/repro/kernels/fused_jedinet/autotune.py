@@ -1,0 +1,72 @@
+"""VMEM working-set estimators for the fused JEDI-net kernels.
+
+Both fused kernels (edge-only and whole-network) are gridded over the
+batch axis only: one program instance owns ``block_b`` jets and every
+intermediate for those jets lives in VMEM.  Choosing ``block_b`` is
+therefore a pure working-set computation — the per-sample VMEM bytes of
+the LARGEST live intermediate chain — fed to the shared tile picker in
+``repro.kernels.autotune``.
+
+This replaces the ad-hoc ``_pick_block_b`` that used to live in
+``ops.py``.  Two behavioural fixes over that version:
+
+* The edge-only estimate ignored everything but the f_R grid; the full
+  kernel also keeps C, the f_O activations and the phi_O activations
+  live, so the working set is modelled per kernel from the actual layer
+  widths.
+* The old picker rounded ``block_b`` down to a *divisor of the batch*
+  so the grid tiled exactly.  A prime batch (B=1009) therefore degraded
+  to ``block_b=1`` — a 1009-step grid of tiny tiles.  The shared picker
+  keeps the VMEM-optimal tile and PADS the batch to the next tile
+  multiple (callers slice the output back); worst-case padding overhead
+  is (block_b-1)/B — sub-percent for any realistic trigger batch —
+  versus up to a block_b-times larger grid.
+"""
+
+from __future__ import annotations
+
+# Re-exported so kernel wrappers and tests have one import surface.
+from repro.kernels.autotune import (  # noqa: F401
+    VMEM_BUDGET_BYTES,
+    _SUBLANE,
+    mlp_widths,
+    pad_batch,
+    padded_batch,
+    pick_block_b,
+)
+
+
+def edge_block_bytes_per_sample(n_objects: int, n_features: int,
+                                fr_widths: list[int],
+                                acc_bytes: int = 4) -> int:
+    """Per-jet VMEM working set of the edge-only kernel (fp32 accumulation).
+
+    Dominated by the dense (N_o, N_o, width) interaction grid; the x tile
+    and the Ebar output tile ride along.
+    """
+    n_o = n_objects
+    grid = n_o * n_o * max(fr_widths + [_SUBLANE])
+    x_tile = n_o * n_features
+    out_tile = n_o * fr_widths[-1]
+    return (grid + x_tile + out_tile) * acc_bytes
+
+
+def full_forward_bytes_per_sample(n_objects: int, n_features: int,
+                                  fr_widths: list[int],
+                                  fo_widths: list[int],
+                                  phi_widths: list[int],
+                                  acc_bytes: int = 4) -> int:
+    """Per-jet VMEM working set of the whole-network kernel.
+
+    The f_R grid still dominates, but C = [x ‖ Ebar], the f_O activations
+    and the (per-tile negligible) phi_O activations are live in the same
+    program, so they count against the same budget.
+    """
+    n_o = n_objects
+    grid = n_o * n_o * max(fr_widths + [_SUBLANE])
+    x_tile = n_o * n_features
+    ebar = n_o * fr_widths[-1]
+    c_tile = n_o * (n_features + fr_widths[-1])
+    fo_acts = n_o * max(fo_widths + [_SUBLANE])
+    phi_acts = max(phi_widths + [_SUBLANE])
+    return (grid + x_tile + ebar + c_tile + fo_acts + phi_acts) * acc_bytes

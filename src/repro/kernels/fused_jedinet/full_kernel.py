@@ -1,0 +1,149 @@
+"""Pallas TPU kernel: whole-network fused JEDI-net forward (x -> logits).
+
+The edge-only kernel (``kernel.py``) fuses MMM1/2 + f_R + MMM3 but still
+bounces Ebar, C and O through XLA/HBM for f_O, the node-sum and phi_O.
+This kernel extends the paper's Sec 3.5 "divide, conquer, fuse" to ALL
+sub-layers: one program instance owns a batch tile and computes
+
+    bilinear-split f_R  ->  dense-grid aggregation  ->  C = [x ‖ Ebar]
+        ->  f_O  ->  sum_i O[i]  ->  phi_O  ->  logits
+
+entirely in VMEM.  No intermediate (B, E, Ebar, C, O) ever touches HBM —
+the only HBM traffic is the weights + x in and the (batch, n_targets)
+logits out, the TPU analogue of the paper's fully-fused layer-wise
+architecture where every stage hand-off is an on-chip stream.
+
+Precision co-design (the paper tunes FPGA word lengths; we tune the MXU
+input dtype): every matmul casts its operands to ``compute_dtype`` and
+accumulates in fp32 via ``preferred_element_type``; biases, activations
+and both reductions (sender-sum, node-sum) stay fp32.  With
+``compute_dtype="bfloat16"`` the MXU runs at its native rate while the
+additive aggregation — the numerically delicate part (up to N_o-1 = 49
+summands) — keeps full precision.
+
+The two beyond-paper transformations of the edge kernel (bilinear
+first-layer split; dense N_o x N_o grid + diagonal correction instead of
+a gather) are inherited unchanged — see kernel.py's docstring and
+EXPERIMENTS.md §Perf.
+
+Grid: one program per batch tile, weights broadcast to every step.
+``block_b`` comes from the working-set autotuner (autotune.py), which
+models the FULL live set (grid + C + f_O acts), not just the f_R grid.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.fused_jedinet.kernel import _mm
+from repro.nn.core import ACTIVATIONS
+
+
+def _full_forward_kernel(x_ref, *rest_refs, activation: str, n_fr: int,
+                         n_fo: int, n_phi: int):
+    """rest_refs = [w1r, w1s, b1, (fr w/b)*, (fo w/b)*, (phi w/b)*, out_ref].
+
+    Weight refs arrive pre-cast to the compute dtype; biases are fp32.
+    """
+    out_ref = rest_refs[-1]
+    wref = list(rest_refs[:-1])
+    act = ACTIVATIONS[activation]
+
+    w1r, w1s, b1 = wref[0], wref[1], wref[2]
+    fr_rest = wref[3:3 + 2 * (n_fr - 1)]
+    fo_w = wref[3 + 2 * (n_fr - 1):3 + 2 * (n_fr - 1) + 2 * n_fo]
+    phi_w = wref[3 + 2 * (n_fr - 1) + 2 * n_fo:]
+
+    x = x_ref[...]                                      # (bb, N_o, P) cdt
+    _, n_o, _ = x.shape
+
+    # --- f_R layer 1, bilinear split: per-node projections (N_o rows)
+    u_r = _mm(x, w1r[...])                              # (bb, N_o, H1) fp32
+    u_s = _mm(x, w1s[...])
+
+    # --- dense receiver x sender grid (regular access, no gather)
+    h = u_r[:, :, None, :] + u_s[:, None, :, :] + b1[...]
+    if n_fr > 1:                                        # f_R output is linear
+        h = act(h)                                      # (bb, N_o, N_o, H1)
+
+    # --- remaining f_R layers on the grid
+    for li in range(n_fr - 1):
+        h = _mm(h, fr_rest[2 * li][...]) + fr_rest[2 * li + 1][...]
+        if li < n_fr - 2:
+            h = act(h)
+
+    # --- aggregate: zero the self-edge diagonal, then sum over senders.
+    # Masking BEFORE the sum (instead of subtracting the diagonal after)
+    # keeps the summand set identical to the strength-reduced reference —
+    # no subtractive cancellation, so fp32 agreement stays < 1e-4.
+    mask = 1.0 - jnp.eye(n_o, dtype=h.dtype)
+    ebar = jnp.sum(h * mask[None, :, :, None], axis=2)  # (bb, N_o, D_e)
+
+    # --- C = [x ‖ Ebar]; f_O per node, all still in VMEM
+    h = jnp.concatenate([x.astype(jnp.float32), ebar], axis=-1)
+    for li in range(n_fo):
+        h = _mm(h, fo_w[2 * li][...]) + fo_w[2 * li + 1][...]
+        if li < n_fo - 1:
+            h = act(h)                                  # (bb, N_o, D_o)
+
+    # --- node-sum + phi_O -> logits
+    h = jnp.sum(h, axis=1)                              # (bb, D_o) fp32
+    for li in range(n_phi):
+        h = _mm(h, phi_w[2 * li][...]) + phi_w[2 * li + 1][...]
+        if li < n_phi - 1:
+            h = act(h)
+
+    out_ref[...] = h.astype(out_ref.dtype)              # (bb, n_targets)
+
+
+def flatten_mlp(params, dtype):
+    """[w0, b0, w1, b1, ...] with weights cast to ``dtype``, biases fp32."""
+    flat = []
+    for lp in params["layers"]:
+        flat.append(lp["w"].astype(dtype))
+        flat.append(lp["b"].astype(jnp.float32))
+    return flat
+
+
+def fused_forward_full_kernel_call(x, fr_arrays, fo_arrays, phi_arrays, *,
+                                   activation: str, n_targets: int,
+                                   block_b: int, interpret: bool = False):
+    """x: (B, N_o, P) compute-dtype -> logits (B, n_targets) fp32.
+
+    ``B % block_b == 0`` (callers pad via autotune.pad_batch).
+    ``fr_arrays = [w1r, w1s, b1, w2, b2, ...]`` from split_first_layer.
+    """
+    bsz, n_o, p = x.shape
+    assert bsz % block_b == 0, (bsz, block_b)
+    n_fr = 1 + (len(fr_arrays) - 3) // 2
+    n_fo = len(fo_arrays) // 2
+    n_phi = len(phi_arrays) // 2
+    weights = [*fr_arrays, *fo_arrays, *phi_arrays]
+    grid = (bsz // block_b,)
+
+    def xmap(i):
+        return (i, 0, 0)
+
+    def wmap(ndim):
+        def m(i):
+            return (0,) * ndim
+        return m
+
+    in_specs = [pl.BlockSpec((block_b, n_o, p), xmap)]
+    for w in weights:
+        in_specs.append(pl.BlockSpec(w.shape, wmap(w.ndim)))
+
+    kernel = functools.partial(_full_forward_kernel, activation=activation,
+                               n_fr=n_fr, n_fo=n_fo, n_phi=n_phi)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_b, n_targets), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n_targets), jnp.float32),
+        interpret=interpret,
+    )(x, *weights)

@@ -53,25 +53,32 @@ from jax.experimental import pallas as pl
 from repro.nn.core import ACTIVATIONS
 
 
+def _mm(h, w):
+    """Matmul with compute-dtype operands and fp32 accumulation."""
+    return jax.lax.dot_general(
+        h.astype(w.dtype), w,
+        (((h.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
 def _edge_block_kernel(x_ref, w1r_ref, w1s_ref, b1_ref, *rest_refs,
                        activation: str, n_layers: int):
-    """rest_refs = [w2, b2, w3, b3, ..., out_ref]."""
+    """rest_refs = [w2, b2, w3, b3, ..., out_ref].
+
+    Weight refs arrive pre-cast to the compute dtype (the precision
+    co-design knob, ``JediNetConfig.compute_dtype``); biases are fp32 and
+    every matmul accumulates fp32 via ``preferred_element_type``.
+    """
     out_ref = rest_refs[-1]
     wref = rest_refs[:-1]
     act = ACTIVATIONS[activation]
 
-    x = x_ref[...].astype(jnp.float32)                  # (bb, N_o, P)
+    x = x_ref[...]                                      # (bb, N_o, P)
     bb, n_o, _ = x.shape
 
     # --- layer 1, bilinear split: per-node projections (N_o rows, not N_E)
-    u_r = jax.lax.dot_general(
-        x, w1r_ref[...],
-        (((2,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)             # (bb, N_o, H1)
-    u_s = jax.lax.dot_general(
-        x, w1s_ref[...],
-        (((2,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)             # (bb, N_o, H1)
+    u_r = _mm(x, w1r_ref[...])                          # (bb, N_o, H1) fp32
+    u_s = _mm(x, w1s_ref[...])                          # (bb, N_o, H1) fp32
 
     # --- dense receiver x sender grid (regular access, no gather)
     h = u_r[:, :, None, :] + u_s[:, None, :, :] + b1_ref[...]
@@ -80,11 +87,7 @@ def _edge_block_kernel(x_ref, w1r_ref, w1s_ref, b1_ref, *rest_refs,
 
     # --- remaining f_R layers on the flattened grid
     for li in range(n_layers - 1):
-        w = wref[2 * li][...]
-        b = wref[2 * li + 1][...]
-        h = jax.lax.dot_general(
-            h, w, (((3,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32) + b
+        h = _mm(h, wref[2 * li][...]) + wref[2 * li + 1][...]
         if li < n_layers - 2:
             h = act(h)                                  # no act on f_R output
 
@@ -95,15 +98,19 @@ def _edge_block_kernel(x_ref, w1r_ref, w1s_ref, b1_ref, *rest_refs,
     out_ref[...] = (total - diag).astype(out_ref.dtype)
 
 
-def split_first_layer(params_fr, n_features: int):
-    """Split f_R's first-layer weight into receiver / sender halves."""
+def split_first_layer(params_fr, n_features: int, dtype=jnp.float32):
+    """Split f_R's first-layer weight into receiver / sender halves.
+
+    Weights are cast to ``dtype`` (the MXU compute dtype); biases stay
+    fp32 so the bias-add happens on the fp32 accumulator.
+    """
     layers = params_fr["layers"]
-    w1 = layers[0]["w"].astype(jnp.float32)             # (2P, H1)
+    w1 = layers[0]["w"].astype(dtype)                   # (2P, H1)
     b1 = layers[0]["b"].astype(jnp.float32)
     w1r, w1s = w1[:n_features], w1[n_features:]
     rest = []
     for lp in layers[1:]:
-        rest.append(lp["w"].astype(jnp.float32))
+        rest.append(lp["w"].astype(dtype))
         rest.append(lp["b"].astype(jnp.float32))
     return w1r, w1s, b1, rest
 
@@ -112,6 +119,7 @@ def fused_edge_block_kernel_call(x, w1r, w1s, b1, rest, *, activation: str,
                                  block_b: int, interpret: bool = False):
     """x: (B, N_o, P) fp32 -> Ebar (B, N_o, D_e) fp32. B % block_b == 0."""
     bsz, n_o, p = x.shape
+    assert bsz % block_b == 0, (bsz, block_b)
     n_layers = 1 + len(rest) // 2
     d_e = (rest[-2].shape[-1] if rest else w1r.shape[-1])
     grid = (bsz // block_b,)

@@ -1,4 +1,21 @@
-"""Jit'd public wrapper for the fused JEDI-net edge block."""
+"""Jit'd public wrappers for the fused JEDI-net kernels.
+
+Two entry points:
+
+* :func:`fused_edge_block` — edge-only fusion (B-construct + f_R + MMM3 in
+  VMEM); Ebar returns to XLA for f_O / phi_O.
+* :func:`fused_forward_full` — whole-network fusion (x -> logits in one
+  kernel); the only HBM traffic is weights + x in, logits out.
+
+Both pick their batch tile from the working-set autotuner (autotune.py)
+and PAD non-divisible batches to the next tile multiple instead of
+degrading the tile size — a prime batch (B=1009) keeps its VMEM-optimal
+tile and pays <1% padded compute rather than running a 1009-step grid.
+
+The MXU compute dtype is ``cfg.compute_dtype`` (the paper's precision /
+latency co-design knob): weights and x are cast down, accumulation and
+the two reductions stay fp32.
+"""
 
 from __future__ import annotations
 
@@ -7,27 +24,52 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.fused_jedinet import autotune
+from repro.kernels.fused_jedinet import full_kernel as FK
 from repro.kernels.fused_jedinet import kernel as K
-
-
-def _pick_block_b(bsz: int, n_o: int, width: int) -> int:
-    """Largest batch tile whose activation grid fits a ~8 MB VMEM budget."""
-    budget = 8 * 1024 * 1024
-    per_sample = n_o * n_o * max(width, 8) * 4          # fp32 grid acts
-    bb = max(1, min(bsz, budget // max(per_sample, 1)))
-    # round down to a divisor of bsz (grid must tile exactly)
-    while bsz % bb:
-        bb -= 1
-    return bb
 
 
 @partial(jax.jit, static_argnames=("cfg", "interpret", "block_b"))
 def fused_edge_block(params_fr, cfg, x, *, interpret: bool = False,
                      block_b: int | None = None):
     """Ebar = aggregated f_R messages. x: (B, N_o, P) -> (B, N_o, D_e)."""
-    w1r, w1s, b1, rest = K.split_first_layer(params_fr, cfg.n_features)
-    width = max([w1r.shape[-1]] + [r.shape[-1] for r in rest[::2]])
-    bb = block_b or _pick_block_b(x.shape[0], cfg.n_objects, width)
-    return K.fused_edge_block_kernel_call(
-        x.astype(jnp.float32), w1r, w1s, b1, rest,
+    cdt = jnp.dtype(cfg.compute_dtype)
+    w1r, w1s, b1, rest = K.split_first_layer(params_fr, cfg.n_features,
+                                             dtype=cdt)
+    widths = [w1r.shape[-1]] + [r.shape[-1] for r in rest[::2]]
+    bb = block_b or autotune.pick_block_b(
+        x.shape[0],
+        autotune.edge_block_bytes_per_sample(cfg.n_objects, cfg.n_features,
+                                             widths))
+    bsz = x.shape[0]
+    xp = autotune.pad_batch(x.astype(cdt), bb)
+    out = K.fused_edge_block_kernel_call(
+        xp, w1r, w1s, b1, rest,
         activation=cfg.activation, block_b=bb, interpret=interpret)
+    return out[:bsz]
+
+
+@partial(jax.jit, static_argnames=("cfg", "interpret", "block_b"))
+def fused_forward_full(params, cfg, x, *, interpret: bool = False,
+                       block_b: int | None = None):
+    """Whole-network fused forward. x: (B, N_o, P) -> logits (B, n_targets)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    fr = K.split_first_layer(params["fr"], cfg.n_features, dtype=cdt)
+    fr_arrays = [fr[0], fr[1], fr[2], *fr[3]]
+    fo_arrays = FK.flatten_mlp(params["fo"], cdt)
+    phi_arrays = FK.flatten_mlp(params["phi"], cdt)
+
+    bb = block_b or autotune.pick_block_b(
+        x.shape[0],
+        autotune.full_forward_bytes_per_sample(
+            cfg.n_objects, cfg.n_features,
+            autotune.mlp_widths(params["fr"]),
+            autotune.mlp_widths(params["fo"]),
+            autotune.mlp_widths(params["phi"])))
+    bsz = x.shape[0]
+    xp = autotune.pad_batch(x.astype(cdt), bb)
+    out = FK.fused_forward_full_kernel_call(
+        xp, fr_arrays, fo_arrays, phi_arrays,
+        activation=cfg.activation, n_targets=cfg.n_targets,
+        block_b=bb, interpret=interpret)
+    return out[:bsz]

@@ -61,6 +61,24 @@ def test_fused_edge_block_batch_tiling():
                                    rtol=1e-6)
 
 
+@pytest.mark.parametrize("batch", [7, 13])
+def test_fused_edge_block_prime_batch(batch):
+    """Prime / non-divisible batches pad to the tile instead of degrading
+    the tile to block_b=1 (the old divisor-rule failure mode)."""
+    cfg = inet.JediNetConfig(n_objects=10, n_features=4, d_e=3,
+                             fr_hidden=(8,))
+    params = inet.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, 10, 4))
+    ref = fused_edge_block_ref(params["fr"], cfg, x)
+    # autotuned tile AND an explicit non-divisor tile both pad correctly
+    for bb in (None, 4):
+        got = fj_ops.fused_edge_block(params["fr"], cfg, x, interpret=True,
+                                      block_b=bb)
+        assert got.shape == (batch, 10, 3)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
+                                   rtol=2e-4, atol=2e-4)
+
+
 # --- flash decode ------------------------------------------------------------
 
 @pytest.mark.parametrize("b,h,hkv,d,s,chunk", [
