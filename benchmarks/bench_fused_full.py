@@ -20,14 +20,9 @@ import jax.numpy as jnp
 from benchmarks.common import row, time_fn
 from repro.core import codesign, interaction_net as inet
 
-# forward-path name -> TPUModel fusion level
-PATH_LEVELS = {
-    "dense": "none",
-    "sr": "none",
-    "sr_split": "none",
-    "fused": "edge",
-    "fused_full": "full",
-}
+# forward-path name -> TPUModel fusion level (single source of truth in
+# core.codesign; the serving engine uses the same mapping)
+PATH_LEVELS = codesign.PATH_FUSED_LEVELS
 
 _INTERPRET_PATHS = ("fused", "fused_full")
 

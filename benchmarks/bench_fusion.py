@@ -13,7 +13,7 @@ from __future__ import annotations
 import jax
 
 from repro.core import codesign, interaction_net as inet
-from benchmarks.common import row, time_fn
+from benchmarks.common import row
 
 
 def run():

@@ -1,0 +1,100 @@
+"""Serving-tier trajectory benchmark: KGPS + per-event p50/p99 per bucket.
+
+Pumps a short synthetic stream through the :class:`ServingEngine` for
+each (config x forward path x ladder bucket) and records sustained KGPS
+plus per-event p50/p99 next to the TPU-model roofline for that bucket.
+``run()`` fills ``JSON_PAYLOAD``; ``benchmarks/run.py`` writes it to
+``BENCH_serving.json`` (``JSON_NAME``) so the serving trajectory is
+machine-trackable across PRs and gated by ``check_regression.py``.
+
+Pallas paths run in interpret mode off-TPU: their wall-clock is a CPU
+emulation (flagged ``"interpret": true`` in the JSON) — the roofline is
+the cross-PR comparable number there, exactly as in bench_fused_full.
+Bucket counts/stream lengths are kept small off-TPU so CI stays fast.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import interaction_net as inet
+from repro.serving import ServingEngine
+
+JSON_NAME = "BENCH_serving.json"
+JSON_PAYLOAD: dict = {}
+
+# serving-relevant paths: the XLA production fallback and both kernels
+PATHS = ("sr_split", "fused_full")
+
+
+def _bench_engine(cfg, params, path, *, on_tpu):
+    engine = ServingEngine(params, cfg, forward=path,
+                           max_batch=1024 if on_tpu else 64)
+    interpret = engine.interpret
+    # off-TPU interpret emulation is slow — trim buckets and stream length
+    buckets = engine.bucket_sizes if on_tpu else engine.bucket_sizes[:3]
+    n_batches = 8
+    warmup = 2
+    roofline = engine.roofline(buckets)
+
+    out = {}
+    rng = np.random.RandomState(0)
+    for bucket in buckets:
+        # non-aligned tick size: exercises the pad-to-bucket path
+        n_valid = max(1, bucket - 3)
+        stream = [rng.normal(0, 1, (n_valid, cfg.n_objects, cfg.n_features))
+                  .astype(np.float32) for _ in range(n_batches + warmup)]
+        res = engine.run_stream(stream, warmup=warmup)
+        snap = engine.metrics.snapshot()
+        min_us = min(res["latencies"]) * 1e6
+        out[str(bucket)] = {
+            "kgps": res["kgps"],
+            "p50_us": snap["p50_us"],
+            "p99_us": snap["p99_us"],
+            "per_event_p50_us": snap["p50_us"] / n_valid,
+            "per_event_p99_us": snap["p99_us"] / n_valid,
+            # min is the noise-robust estimator the regression gate uses
+            # (percentiles on a short CPU stream jump with scheduler pauses)
+            "min_us": min_us,
+            "per_event_min_us": min_us / n_valid,
+            "n_valid": n_valid,
+            "batches": len(res["latencies"]),
+            "modeled_step_us": roofline[bucket]["step_us"],
+            "modeled_bound": roofline[bucket]["bound"],
+        }
+        # fresh window per bucket so percentiles don't mix shapes
+        engine.metrics = type(engine.metrics)()
+    return {"interpret": interpret, "buckets": out}
+
+
+def run():
+    on_tpu = jax.default_backend() == "tpu"
+    rows = []
+    payload = {"schema": 1, "backend": jax.default_backend(), "configs": {}}
+
+    for cname, n_o in (("30p", 30), ("50p", 50)):
+        cfg = inet.JediNetConfig(n_objects=n_o, n_features=16)
+        params = inet.init(jax.random.PRNGKey(0), cfg, scale="lecun")
+        entry = {"n_objects": n_o, "paths": {}}
+        for path in PATHS:
+            res = _bench_engine(cfg, params, path, on_tpu=on_tpu)
+            entry["paths"][path] = res
+            for bucket, b in res["buckets"].items():
+                rows.append(row(
+                    f"serving_{cname}_{path}_b{bucket}",
+                    b["p50_us"],
+                    f"kgps={b['kgps']:.1f} per_event_p50={b['per_event_p50_us']:.2f}us"
+                    f" modeled={b['modeled_step_us']:.1f}us"
+                    f"{' (interpret)' if res['interpret'] else ''}"))
+        payload["configs"][cname] = entry
+
+    JSON_PAYLOAD.clear()
+    JSON_PAYLOAD.update(payload)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

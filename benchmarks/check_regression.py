@@ -1,0 +1,208 @@
+"""CI perf-regression gate over the committed BENCH_*.json baselines.
+
+    python benchmarks/check_regression.py --fresh-dir bench_out
+
+Compares freshly produced ``BENCH_fused.json`` / ``BENCH_serving.json``
+against the committed baselines (repo root by default) and exits 1 when
+any path's wall-clock regresses by more than ``--max-regress`` (default
+1.30 = +30%, sized for CPU-CI noise).  What is compared:
+
+* ``BENCH_fused.json`` — per (config, path) ``wall_us``;
+* ``BENCH_serving.json`` — per (config, path, bucket)
+  ``per_event_min_us`` (the serving tier's wall-clock-per-event; min is
+  the noise-robust estimator, falling back to ``per_event_p50_us`` for
+  baselines that predate it).
+
+Wall-clocks are normalized by the fresh/baseline ``calibration_us``
+ratio when both payloads carry one (a fixed numpy workload timed at
+emission): a slower CI runner or a throttled laptop shifts every number
+AND the yardstick, so the gate only fires on paths that regress
+*relative to the machine*.  Entries are only compared when they are
+comparable: same backend, same interpret flag, both present.
+Interpret-mode entries (Pallas kernels emulated off-TPU — "trends, not
+truth" per EXPERIMENTS.md) get ``--interpret-slack`` (default 2x) on
+top of the threshold: their pure-Python wall-clocks track neither BLAS
+nor XLA yardsticks.  New paths/buckets (no baseline yet) and removed
+ones are reported but never fail the gate — growth is not a
+regression.  KGPS drops are reported as warnings only (KGPS is the
+inverse of a wall-clock already gated).
+
+Intentional baseline refresh: regenerate the committed files with
+
+    PYTHONPATH=src python -m benchmarks.run --only fused_paths,serving
+
+(writes to the repo root) and commit them, or set the override knob
+``BENCH_REGRESS_OK=1`` (env) / ``--allow-regress`` to turn failures
+into warnings for one run.  Documented in EXPERIMENTS.md §Serving.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+PAIRS = ("BENCH_fused.json", "BENCH_serving.json")
+
+
+def _load(path):
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _comparable(fresh, base):
+    return fresh.get("backend") == base.get("backend")
+
+
+def _iter_fused(doc):
+    """Yields (key, entry) per (config, path)."""
+    for cname, c in doc.get("configs", {}).items():
+        for pname, p in c.get("paths", {}).items():
+            yield f"{cname}/{pname}", p
+
+
+def _iter_serving(doc):
+    """Yields (key, entry ('interpret' folded in)) per (config, path, bucket)."""
+    for cname, c in doc.get("configs", {}).items():
+        for pname, p in c.get("paths", {}).items():
+            for bname, b in p.get("buckets", {}).items():
+                yield f"{cname}/{pname}/b{bname}", dict(
+                    b, interpret=p.get("interpret"))
+
+
+def _speed_scale(fresh, base) -> float:
+    """fresh/baseline machine-speed ratio from the calibration stamps
+    (1.0 when either payload predates calibration)."""
+    fc, bc = fresh.get("calibration_us"), base.get("calibration_us")
+    if fc and bc and bc > 0:
+        return fc / bc
+    return 1.0
+
+
+def compare(fresh, base, iterate, metrics, max_regress, *, scale=1.0,
+            interpret_slack=1.0, warn_metric=None,
+            warn_higher_is_better=False):
+    """Returns (failures, warnings, infos) line lists.
+
+    ``metrics`` is a preference list; the first key present in BOTH
+    entries is gated.  Fresh values are divided by ``scale`` (the
+    machine-speed ratio) before comparing.
+    """
+    failures, warnings, infos = [], [], []
+    fresh_e = dict(iterate(fresh))
+    base_e = dict(iterate(base))
+    for key in sorted(set(fresh_e) | set(base_e)):
+        f, b = fresh_e.get(key), base_e.get(key)
+        if f is None:
+            infos.append(f"{key}: dropped (no fresh entry)")
+            continue
+        if b is None:
+            infos.append(f"{key}: new (no baseline) "
+                         f"{metrics[0]}={f.get(metrics[0], float('nan')):.2f}")
+            continue
+        if f.get("interpret") != b.get("interpret"):
+            infos.append(f"{key}: interpret flag changed — not compared")
+            continue
+        metric = next((m for m in metrics if f.get(m) and b.get(m)), None)
+        if metric is None:
+            infos.append(f"{key}: no shared metric of {metrics} — skipped")
+            continue
+        fv, bv = f[metric] / scale, b[metric]
+        ratio = fv / bv
+        limit = max_regress * (interpret_slack if f.get("interpret") else 1.0)
+        line = (f"{key}: {metric} {bv:.2f} -> {fv:.2f} us "
+                f"({ratio:.0%} of baseline, speed-normalized, "
+                f"limit {limit:.0%})")
+        if ratio > limit:
+            failures.append(line)
+        else:
+            infos.append(line)
+        if warn_metric and b.get(warn_metric) and f.get(warn_metric):
+            # throughput scales inversely with machine speed
+            norm = scale if warn_higher_is_better else 1.0 / scale
+            wr = f[warn_metric] * norm / b[warn_metric]
+            bad = wr < 1 / max_regress if warn_higher_is_better \
+                else wr > max_regress
+            if bad:
+                warnings.append(
+                    f"{key}: {warn_metric} {b[warn_metric]:.2f} -> "
+                    f"{f[warn_metric]:.2f}")
+    return failures, warnings, infos
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh-dir", default="bench_out",
+                    help="directory holding freshly produced BENCH_*.json")
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory holding the committed baselines")
+    ap.add_argument("--max-regress", type=float, default=1.30,
+                    help="fail when fresh/baseline wall-clock exceeds this")
+    ap.add_argument("--interpret-slack", type=float, default=2.0,
+                    help="extra factor on the threshold for interpret-mode "
+                         "(off-TPU Pallas emulation) entries")
+    ap.add_argument("--allow-regress", action="store_true",
+                    help="report regressions but exit 0 (baseline refresh)")
+    args = ap.parse_args(argv)
+    allow = args.allow_regress or os.environ.get("BENCH_REGRESS_OK") == "1"
+
+    all_failures = []
+    for name in PAIRS:
+        fresh = _load(os.path.join(args.fresh_dir, name))
+        base = _load(os.path.join(args.baseline_dir, name))
+        print(f"== {name} ==")
+        if fresh is None:
+            print(f"  FAIL: no fresh file in {args.fresh_dir}")
+            all_failures.append(f"{name}: missing fresh file")
+            continue
+        if base is None:
+            print("  no committed baseline — skipping (first run?)")
+            continue
+        if not _comparable(fresh, base):
+            print(f"  backends differ (fresh={fresh.get('backend')} "
+                  f"baseline={base.get('backend')}) — not comparable, skipped")
+            continue
+        scale = _speed_scale(fresh, base)
+        print(f"  machine-speed scale: {scale:.2f}x "
+              f"(fresh/baseline calibration)")
+        if name == "BENCH_fused.json":
+            fails, warns, infos = compare(
+                fresh, base, _iter_fused, ["wall_us"], args.max_regress,
+                scale=scale, interpret_slack=args.interpret_slack)
+        else:
+            fails, warns, infos = compare(
+                fresh, base, _iter_serving,
+                ["per_event_min_us", "per_event_p50_us"], args.max_regress,
+                scale=scale, interpret_slack=args.interpret_slack,
+                warn_metric="kgps", warn_higher_is_better=True)
+        for line in infos:
+            print(f"  {line}")
+        for line in warns:
+            print(f"  WARN: {line}")
+        for line in fails:
+            print(f"  REGRESSION: {line}")
+        all_failures.extend(f"{name}: {line}" for line in fails)
+
+    if all_failures:
+        print(f"\n{len(all_failures)} perf regression(s) "
+              f"(> {args.max_regress:.0%} of baseline):")
+        for line in all_failures:
+            print(f"  {line}")
+        if allow:
+            print("override active (BENCH_REGRESS_OK=1 / --allow-regress): "
+                  "exiting 0; refresh the committed baselines in this PR")
+            return 0
+        print("intentional? refresh baselines with "
+              "`PYTHONPATH=src python -m benchmarks.run "
+              "--only fused_paths,serving` and commit, or set "
+              "BENCH_REGRESS_OK=1 for this run")
+        return 1
+    print("\nno perf regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

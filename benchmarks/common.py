@@ -5,6 +5,25 @@ from __future__ import annotations
 import time
 
 import jax
+import numpy as np
+
+
+def calibration_us(iters: int = 12) -> float:
+    """Median wall time of a fixed jitted XLA workload (microseconds).
+
+    A machine-speed yardstick stamped into every BENCH_*.json payload:
+    the regression gate divides fresh wall-clocks by the fresh/baseline
+    calibration ratio, normalizing away global runner-speed differences
+    (CI hardware generations, CPU throttling) while per-path regressions
+    — which move relative to the yardstick — still trip the gate.  The
+    workload is a jitted matmul so the yardstick exercises the same XLA
+    runtime/threadpool the benchmarks do, not just BLAS.
+    """
+    import jax.numpy as jnp
+    rng = np.random.RandomState(0)
+    a = jnp.asarray(rng.normal(0, 1, (512, 512)).astype(np.float32))
+    fn = jax.jit(lambda x: x @ x + x)
+    return time_fn(fn, a, warmup=3, iters=iters)
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:

@@ -1,22 +1,26 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig8,table2,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig8,serving,...]
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
-When the ``fused_paths`` benchmark runs, its per-path wall-clock +
-modeled-HBM payload is also written to ``BENCH_fused.json`` (override
-with ``--json-out``) so the perf trajectory is machine-trackable
-across PRs.
+Any benchmark module may define ``JSON_PAYLOAD`` (filled by its
+``run()``) plus ``JSON_NAME``: the payload is then written to
+``<out-dir>/<JSON_NAME>`` so the perf trajectory is machine-trackable
+across PRs — ``fused_paths`` emits ``BENCH_fused.json``, ``serving``
+emits ``BENCH_serving.json``.  The committed copies at the repo root
+are the regression baselines (``benchmarks/check_regression.py``); CI
+writes fresh copies to a scratch ``--out-dir`` and compares.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import traceback
 
-from benchmarks.common import print_rows
+from benchmarks.common import calibration_us, print_rows
 
 BENCHES = {
     "fig8_ops_reduction": "benchmarks.bench_ops_reduction",
@@ -27,38 +31,57 @@ BENCHES = {
     "table3_throughput": "benchmarks.bench_throughput",
     "roofline_summary": "benchmarks.bench_roofline_summary",
     "fused_paths": "benchmarks.bench_fused_full",
+    "serving": "benchmarks.bench_serving",
 }
+
+# legacy name kept so `--json-out` keeps steering the fused payload
+_FUSED_JSON = "BENCH_fused.json"
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark keys")
-    ap.add_argument("--json-out", default="BENCH_fused.json",
-                    help="where to write the fused_paths JSON payload")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for BENCH_*.json payloads")
+    ap.add_argument("--json-out", default=None,
+                    help=f"override path for {_FUSED_JSON} (legacy)")
     args = ap.parse_args()
     keys = args.only.split(",") if args.only else list(BENCHES)
 
     import importlib
     all_rows = []
     failed = []
-    json_payload = None
+    payloads: dict[str, dict] = {}   # out-path -> payload
     for k in keys:
         try:
             mod = importlib.import_module(BENCHES[k])
             all_rows.extend(mod.run())
-            if k == "fused_paths":
-                json_payload = dict(mod.JSON_PAYLOAD)
+            if getattr(mod, "JSON_PAYLOAD", None):
+                name = getattr(mod, "JSON_NAME", _FUSED_JSON)
+                path = os.path.join(args.out_dir, name)
+                if args.json_out and name == _FUSED_JSON:
+                    path = args.json_out
+                payloads[path] = dict(mod.JSON_PAYLOAD)
         except Exception as e:  # noqa: BLE001
             failed.append(k)
             traceback.print_exc()
             all_rows.append({"name": f"{k}_FAILED", "us_per_call": 0.0,
                              "derived": str(e)})
     print_rows(all_rows)
-    if json_payload is not None:
-        with open(args.json_out, "w") as f:
-            json.dump(json_payload, f, indent=2, sort_keys=True)
-        print(f"\nwrote {args.json_out}", file=sys.stderr)
+    if payloads and args.out_dir != ".":
+        os.makedirs(args.out_dir, exist_ok=True)
+    if payloads:
+        # one machine-speed yardstick per emission, shared by all payloads
+        # (check_regression normalizes wall-clocks by the fresh/baseline
+        # calibration ratio to cancel runner-speed differences)
+        cal = calibration_us()
+        for payload in payloads.values():
+            payload["calibration_us"] = cal
+    for path, payload in payloads.items():
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"\nwrote {path}", file=sys.stderr)
     if failed:
         print(f"\nFAILED: {failed}", file=sys.stderr)
         sys.exit(1)

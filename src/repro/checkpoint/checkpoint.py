@@ -114,8 +114,12 @@ class CheckpointManager:
         self.wait()
         host = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)),
                                       tree)
+        # NON-daemon: on a crash (injected failure, unhandled exception) the
+        # interpreter joins this thread at exit, so an in-flight save always
+        # finalizes its atomic rename instead of dying as a stale .tmp —
+        # that durability is what crash-restart recovery restores from.
         self._thread = threading.Thread(
-            target=self._write, args=(step, host), daemon=True)
+            target=self._write, args=(step, host), daemon=False)
         self._thread.start()
 
     def wait(self):

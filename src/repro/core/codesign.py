@@ -202,6 +202,38 @@ class TPUModel:
         }
 
 
+# Fusion level each FORWARD_FNS path actually achieves (what the serving
+# tier and the trajectory benchmarks should model it as).
+PATH_FUSED_LEVELS = {
+    "dense": "none",
+    "sr": "none",
+    "sr_split": "none",
+    "fused": "edge",
+    "fused_full": "full",
+}
+
+
+def bucket_roofline(cfg: JediNetConfig, buckets, *, fused: bool | str = "full",
+                    compute_bytes: int = 2, chips: int = 1) -> dict:
+    """TPUModel roofline per serving bucket size.
+
+    The batcher pads requests up to ladder buckets, so the question "what
+    should this dispatch cost?" is per BUCKET, not per request: small
+    buckets are weight-traffic (memory) bound — every padded row rides a
+    fixed HBM bill — while large buckets amortize weights and go
+    compute-bound.  Returns ``{bucket: evaluate() dict + per_event_us}``;
+    the crossover is where the deadline/throughput trade-off lives.
+    """
+    out = {}
+    for b in buckets:
+        m = TPUModel.evaluate(
+            TPUDesignPoint(cfg=cfg, batch=int(b), chips=chips,
+                           compute_bytes=compute_bytes), fused=fused)
+        m["per_event_us"] = m["step_us"] / int(b)
+        out[int(b)] = m
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Design-space exploration (Sec. 4.4).
 # ---------------------------------------------------------------------------

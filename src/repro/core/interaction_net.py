@@ -34,7 +34,6 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import adjacency
 from repro.nn import core as nn

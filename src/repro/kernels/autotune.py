@@ -51,6 +51,49 @@ def pick_block_b(batch: int, per_sample_bytes: int,
     return bb
 
 
+def bucket_ladder(max_batch: int, per_sample_bytes: int,
+                  budget_bytes: int = VMEM_BUDGET_BYTES) -> list[int]:
+    """Serving pad-to-bucket batch sizes derived from the VMEM tile.
+
+    Requests are padded UP to the nearest bucket so every bucket compiles
+    exactly once (a warm cache) and an arbitrary request count never
+    triggers a fresh trace.  The ladder is shaped so padding can never
+    force a tile-degenerate kernel either:
+
+    * below the VMEM-optimal tile: sublane-aligned doublings (8, 16, 32,
+      ...) — each fits the budget whole, so the kernel runs one grid step
+      with ``block_b == bucket``;
+    * at and above the tile: whole-tile doublings (t, 2t, 4t, ...) — each
+      bucket is an exact tile multiple, so the grid tiles it with zero
+      intra-kernel padding.
+
+    The last bucket always covers ``max_batch`` (larger requests are
+    chunked by the caller).
+    """
+    max_batch = max(int(max_batch), 1)
+    tile = pick_block_b(max_batch, per_sample_bytes, budget_bytes)
+    ladder: list[int] = []
+    b = _SUBLANE
+    while b < min(tile, max_batch):
+        ladder.append(b)
+        b *= 2
+    t = tile
+    while t < max_batch:
+        ladder.append(t)
+        t *= 2
+    ladder.append(min(t, padded_batch(max_batch, tile)))
+    return sorted(set(ladder))
+
+
+def bucket_for(bucket_sizes, n_events: int) -> int:
+    """Smallest bucket holding ``n_events`` (largest if none do — callers
+    chunk oversized requests through it).  ``bucket_sizes`` ascending."""
+    for b in bucket_sizes:
+        if n_events <= b:
+            return b
+    return bucket_sizes[-1]
+
+
 def padded_batch(batch: int, block_b: int) -> int:
     """``batch`` rounded up to the next multiple of ``block_b``."""
     return ((batch + block_b - 1) // block_b) * block_b

@@ -160,7 +160,6 @@ def from_compiled(compiled, mesh) -> dict:
 
 def model_flops_lm(cfg, n_tokens: int, train: bool = True) -> float:
     """MODEL_FLOPS = 6*N_active*D for train, 2*N*D for inference."""
-    from repro.common.tree import param_count
     import jax
     import jax.numpy as jnp  # noqa: F401
     from repro.models import transformer as tfm

@@ -26,7 +26,6 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchSpec, ShapeSpec
@@ -35,7 +34,6 @@ from repro.models import recsys as fm_lib
 from repro.models import transformer as tfm
 from repro.models.gnn import GNN_MODULES
 from repro.models.gnn import segment_ops as seg
-from repro.nn import core as nn_core
 from repro.parallel import sharding as shd
 from repro.training import make_optimizer, make_train_step
 from repro.training.schedule import warmup_cosine

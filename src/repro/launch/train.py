@@ -98,7 +98,6 @@ def make_program(arch_id: str, batch: int, lr: float):
             opt,
         )
     if arch.family == "gnn":
-        from repro.configs.base import GNNConfig
         from repro.models.gnn import GNN_MODULES
         from repro.data.graphs import community_graph
         from repro.launch.steps import _gnn_loss

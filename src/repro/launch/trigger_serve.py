@@ -1,7 +1,7 @@
-"""Streaming L1-trigger serving driver for the fused JEDI-net paths.
+"""Streaming L1-trigger serving CLI over the serving engine.
 
     PYTHONPATH=src python -m repro.launch.trigger_serve \
-        --n-objects 30 --batch 256 --batches 40 --forward sr_split
+        --n-objects 30 --batch 256 --batches 40 --forward fused_full
 
 The LHC L1 trigger is a hard-real-time stream: events arrive at a fixed
 rate and every event must be classified within the trigger latency budget
@@ -10,43 +10,31 @@ a different position in the same pipeline: it amortizes weight traffic
 over a batch of events, so the serving question becomes *sustained
 throughput at bounded tail latency* rather than single-jet latency.
 
-This driver pumps a synthetic event stream through a jitted forward path
-with a software pipeline that mirrors the paper's ping-pong-buffer
-architecture at the host<->device boundary:
+All the machinery lives in :mod:`repro.serving` now — this module is the
+thin CLI: build a :class:`~repro.serving.ServingEngine` for the chosen
+forward path, pump a synthetic event stream through its double-buffered
+device-feed loop (:func:`~repro.serving.serve_stream`, re-exported here),
+and print the rolling KGPS / p50 / p99 next to the TPU-model roofline
+for the bucket the stream rode in.  ``--batch`` need not match a compile
+bucket: the engine pads to the nearest autotuner ladder rung.
 
-* double-buffered host->device transfer — batch k+1 is `device_put` (an
-  async enqueue on TPU) while batch k is still computing, so PCIe/ICI
-  transfer hides behind compute exactly like the FPGA's coarse-grained
-  pipeline overlaps stages;
-* async dispatch — the jitted call returns a future; we only block on
-  batch k when batch k+1 is already in flight;
-* per-batch latency is measured enqueue->ready and reported as p50/p99
-  alongside sustained KGPS (thousand graphs = events per second).
-
-On CPU (CI) this degenerates to a correct but synchronous pipeline; the
-numbers are only meaningful on a real accelerator.  ``--forward`` accepts
-any FORWARD_FNS key; ``fused_full`` is the production path (one Pallas
-kernel, HBM traffic = weights + x in, logits out), with ``--interpret``
-available so the whole driver can be smoke-tested off-TPU.
+On CPU (CI) the pipeline degenerates to a correct but synchronous loop;
+the numbers are only meaningful on a real accelerator.  ``--forward``
+accepts any FORWARD_FNS key; ``fused_full`` is the production path, with
+``--interpret`` available (auto-enabled off-TPU) so the whole driver can
+be smoke-tested off-TPU.
 """
 
 from __future__ import annotations
 
 import argparse
-import functools
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import codesign
 from repro.core.interaction_net import FORWARD_FNS, JediNetConfig, init
 from repro.data.jets import make_jets
-
-
-def percentile(xs, q: float) -> float:
-    return float(np.percentile(np.asarray(xs), q))
+from repro.serving import ServingEngine, percentile, serve_stream  # noqa: F401  (serve_stream re-exported for drivers/tests)
 
 
 def make_stream(rng, n_batches: int, batch: int, n_objects: int,
@@ -58,51 +46,14 @@ def make_stream(rng, n_batches: int, batch: int, n_objects: int,
             for _ in range(n_batches)]
 
 
-def serve_stream(fwd, stream, *, warmup: int = 2):
-    """Run the double-buffered serving loop; returns per-batch latencies.
-
-    ``fwd`` must be an async-dispatch callable (jitted) taking a device
-    array; latencies are seconds from host handoff to logits-ready.
-    """
-    latencies = []
-    events = 0
-    it = iter(stream)
-
-    # prime the pipeline: first transfer issued before the loop body
-    try:
-        nxt = jax.device_put(next(it))
-    except StopIteration:
-        return latencies, events, 0.0
-
-    t_start = None
-    k = 0
-    while nxt is not None:
-        cur = nxt
-        t0 = time.perf_counter()
-        out = fwd(cur)                      # async dispatch
-        try:
-            nxt = jax.device_put(next(it))  # overlap next H2D with compute
-        except StopIteration:
-            nxt = None
-        out.block_until_ready()
-        t1 = time.perf_counter()
-        k += 1
-        if k <= warmup:                     # exclude compile from stats
-            t_start = time.perf_counter()
-            continue
-        latencies.append(t1 - t0)
-        events += cur.shape[0]
-    wall = (time.perf_counter() - t_start) if t_start else 0.0
-    return latencies, events, wall
-
-
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-objects", type=int, default=30)
     ap.add_argument("--n-features", type=int, default=16)
     ap.add_argument("--batch", type=int, default=256,
-                    help="events per device batch (the trigger's time slice)")
+                    help="events per stream tick (the trigger's time slice)")
     ap.add_argument("--batches", type=int, default=40)
+    ap.add_argument("--warmup", type=int, default=2)
     ap.add_argument("--forward", default="fused_full",
                     choices=sorted(FORWARD_FNS))
     ap.add_argument("--compute-dtype", default="float32",
@@ -115,40 +66,35 @@ def main(argv=None):
     cfg = JediNetConfig(n_objects=args.n_objects, n_features=args.n_features,
                         compute_dtype=args.compute_dtype)
     params = init(jax.random.PRNGKey(args.seed), cfg)
-
-    fn = FORWARD_FNS[args.forward]
-    if args.forward in ("fused", "fused_full"):
-        # compiled Pallas needs a real TPU; fall back to interpret elsewhere
-        interpret = args.interpret or jax.default_backend() != "tpu"
-        fn = functools.partial(fn, interpret=interpret)
-    fwd = jax.jit(lambda x: fn(params, cfg, x))
+    engine = ServingEngine(params, cfg, forward=args.forward,
+                           interpret=args.interpret or None,
+                           max_batch=max(args.batch, 1))
 
     rng = np.random.RandomState(args.seed)
     stream = make_stream(rng, args.batches, args.batch, args.n_objects,
                          args.n_features)
-    lat, events, wall = serve_stream(fwd, stream)
+    res = engine.run_stream(stream, warmup=args.warmup)
 
-    if not lat:
+    if not res["latencies"]:
         print("[trigger_serve] stream too short for stats "
-              f"(need > warmup batches, got {args.batches})")
+              f"(need > warmup={args.warmup} batches, got {args.batches})")
         return
 
-    kgps = events / wall / 1e3 if wall > 0 else float("nan")
-    p50, p99 = percentile(lat, 50) * 1e6, percentile(lat, 99) * 1e6
-    # roofline context: what the TPUModel says this path's step should cost
-    level = {"fused_full": "full", "fused": "edge"}.get(args.forward, "none")
-    model = codesign.TPUModel.evaluate(
-        codesign.TPUDesignPoint(cfg=cfg, batch=args.batch), fused=level)
+    snap = engine.metrics.snapshot()
+    bucket = res["bucket"]
+    model = engine.roofline([bucket])[bucket]
 
     print(f"[trigger_serve] forward={args.forward} "
-          f"n_objects={args.n_objects} batch={args.batch} "
-          f"dtype={args.compute_dtype}")
-    print(f"  sustained  {kgps:8.1f} KGPS  ({events} events / {wall:.3f} s)")
-    print(f"  latency    p50 {p50:8.1f} us   p99 {p99:8.1f} us  per batch")
-    print(f"  per-event  p50 {p50 / args.batch:8.3f} us")
+          f"n_objects={args.n_objects} batch={args.batch} bucket={bucket} "
+          f"dtype={args.compute_dtype} shards={engine.n_shards}")
+    print(f"  sustained  {snap['kgps']:8.1f} KGPS  "
+          f"({res['events']} events / {res['wall_s']:.3f} s)")
+    print(f"  latency    p50 {snap['p50_us']:8.1f} us   "
+          f"p99 {snap['p99_us']:8.1f} us  per batch")
+    print(f"  per-event  p50 {snap['per_event_p50_us']:8.3f} us")
     print(f"  roofline   modeled {model['step_us']:.1f} us/step "
-          f"({model['bound']}-bound, "
-          f"{model['hbm_bytes'] / 1e6:.2f} MB HBM, level={level})")
+          f"({model['bound']}-bound, {model['hbm_bytes'] / 1e6:.2f} MB HBM, "
+          f"level={model['fused_level']})")
 
 
 if __name__ == "__main__":

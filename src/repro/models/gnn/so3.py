@@ -26,7 +26,6 @@ from __future__ import annotations
 import math
 from functools import lru_cache
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

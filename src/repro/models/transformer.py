@@ -21,9 +21,6 @@ inside attention, d_ff->model in the FFN); weights follow PARAM_RULES
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

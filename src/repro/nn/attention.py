@@ -18,8 +18,6 @@ Sliding-window attention (h2o-danube) adds `q_pos - kv_pos < window`.
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

@@ -1,0 +1,20 @@
+"""Serving subsystem: sharded engine + deadline batcher + metrics.
+
+The production layer between request traffic and the fused JEDI-net
+kernels — see engine.py for the architecture notes.
+"""
+
+from repro.serving.batcher import BatchPlan, DeadlineBatcher
+from repro.serving.engine import PALLAS_PATHS, ServingEngine, serve_stream
+from repro.serving.metrics import ServingMetrics, kgps, percentile
+
+__all__ = [
+    "BatchPlan",
+    "DeadlineBatcher",
+    "PALLAS_PATHS",
+    "ServingEngine",
+    "ServingMetrics",
+    "kgps",
+    "percentile",
+    "serve_stream",
+]

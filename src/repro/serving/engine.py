@@ -1,0 +1,269 @@
+"""Sharded inference engine over the JEDI-net forward paths.
+
+The serving-tier counterpart of the paper's FPGA trigger pipeline: one
+object owning everything between "a batch of events exists on the host"
+and "logits are ready", for ANY ``FORWARD_FNS`` path:
+
+* **data-parallel sharding** — the batch axis is ``shard_map``-ped over
+  the local device mesh (``launch/mesh.make_host_mesh``); each device
+  runs the whole fused kernel on its batch slice, the serving analogue
+  of replicating the FPGA pipeline per link.  On one device the wrapper
+  collapses to a plain ``jit``.
+* **warm compile cache** — callables are cached per
+  (path, bucket, event shape, dtype).  Requests are padded up to ladder
+  buckets (:func:`repro.kernels.autotune.bucket_ladder`), so arbitrary
+  request counts reuse a handful of compilations and padding never
+  forces a tile-degenerate recompile.
+* **double-buffered device feed** — :func:`serve_stream` overlaps the
+  next batch's host->device transfer with the current batch's compute
+  (the host-boundary analogue of the paper's ping-pong buffers between
+  pipeline stages).
+* **rolling accounting** — every dispatch lands in a shared
+  :class:`~repro.serving.metrics.ServingMetrics` (p50/p99/KGPS), with
+  padding rows excluded from event counts.
+
+Roofline context per bucket comes from
+:func:`repro.core.codesign.bucket_roofline` so reported wall-clock
+always sits next to what the TPU model says the step should cost.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import PartitionSpec as P
+
+from repro.core import codesign
+from repro.core.interaction_net import FORWARD_FNS
+from repro.kernels import autotune
+from repro.kernels.fused_jedinet.autotune import full_forward_bytes_per_sample
+from repro.launch.mesh import make_host_mesh
+from repro.parallel.sharding import shard_map_compat
+from repro.serving.metrics import ServingMetrics, kgps
+
+# Paths that are Pallas kernels (need interpret=... off-TPU).
+PALLAS_PATHS = ("fused", "fused_full")
+
+
+def serve_stream(fwd, stream, *, warmup: int = 2, metrics=None, bucket=None):
+    """Double-buffered device-feed loop; returns per-batch latencies.
+
+    ``fwd`` must be an async-dispatch callable (jitted) taking a host or
+    device array; latencies are seconds from host handoff to
+    logits-ready.  Batch k+1's ``device_put`` is issued while batch k is
+    still computing, so H2D transfer hides behind compute.  The first
+    ``warmup`` batches (compile + cache warm) are excluded from stats;
+    a stream no longer than ``warmup`` yields empty stats, not a crash.
+
+    When ``metrics`` is given every post-warmup batch is recorded there
+    (``bucket`` labels the records; defaults to the batch row count).
+    """
+    latencies = []
+    events = 0
+    it = iter(stream)
+
+    # prime the pipeline: first transfer issued before the loop body
+    try:
+        nxt = jax.device_put(next(it))
+    except StopIteration:
+        return latencies, events, 0.0
+
+    # wall time starts at the last warmup batch; with no warmup it starts
+    # here, so KGPS is well-defined for any stream length
+    t_start = time.perf_counter() if warmup == 0 else None
+    k = 0
+    while nxt is not None:
+        cur = nxt
+        t0 = time.perf_counter()
+        out = fwd(cur)                      # async dispatch
+        try:
+            nxt = jax.device_put(next(it))  # overlap next H2D with compute
+        except StopIteration:
+            nxt = None
+        jax.block_until_ready(out)
+        t1 = time.perf_counter()
+        k += 1
+        if k <= warmup:                     # exclude compile from stats
+            t_start = time.perf_counter()
+            continue
+        latencies.append(t1 - t0)
+        events += cur.shape[0]
+        if metrics is not None:
+            metrics.record_batch(t1 - t0, cur.shape[0],
+                                 bucket or cur.shape[0])
+    wall = (time.perf_counter() - t_start) if t_start else 0.0
+    return latencies, events, wall
+
+
+class ServingEngine:
+    """Bucketed, sharded, metered inference over one forward path."""
+
+    def __init__(self, params, cfg, *, forward: str = "fused_full",
+                 interpret: bool | None = None, mesh="auto",
+                 bucket_sizes=None, max_batch: int = 1024,
+                 metrics: ServingMetrics | None = None):
+        if forward not in FORWARD_FNS:
+            raise ValueError(f"unknown forward path {forward!r}")
+        self.params = params
+        self.cfg = cfg
+        self.forward = forward
+        # compiled Pallas needs a real TPU; fall back to interpret elsewhere
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = bool(interpret) and forward in PALLAS_PATHS
+        if mesh == "auto":
+            mesh = make_host_mesh() if len(jax.devices()) > 1 else None
+        self.mesh = mesh
+        self.n_shards = int(np.prod(mesh.devices.shape)) if mesh else 1
+        self.metrics = metrics if metrics is not None else ServingMetrics()
+
+        if bucket_sizes is None:
+            # ceil so the top rung still covers max_batch after the
+            # per-device ladder is scaled back up by the shard count
+            per_dev = -(-max_batch // self.n_shards)
+            ladder = autotune.bucket_ladder(
+                per_dev, self._per_sample_bytes())
+            bucket_sizes = [b * self.n_shards for b in ladder]
+        self.bucket_sizes = sorted(int(b) for b in bucket_sizes)
+        if self.mesh is not None:
+            bad = [b for b in self.bucket_sizes if b % self.n_shards]
+            if bad:
+                raise ValueError(
+                    f"buckets {bad} do not divide the {self.n_shards}-way "
+                    "data mesh")
+        self._cache: dict[tuple, object] = {}
+
+    # -- compile-cache management ------------------------------------------
+
+    def _per_sample_bytes(self) -> int:
+        c = self.cfg
+        return full_forward_bytes_per_sample(
+            c.n_objects, c.n_features,
+            autotune.mlp_widths(self.params["fr"]),
+            autotune.mlp_widths(self.params["fo"]),
+            autotune.mlp_widths(self.params["phi"]))
+
+    def _cache_key(self, bucket: int) -> tuple:
+        c = self.cfg
+        return (self.forward, int(bucket), c.n_objects, c.n_features,
+                c.compute_dtype, self.interpret, self.n_shards)
+
+    def compiled_for(self, bucket: int):
+        """The cached jitted callable for one bucket shape (built on miss)."""
+        key = self._cache_key(bucket)
+        fn = self._cache.get(key)
+        if fn is None:
+            fn = self._build()
+            self._cache[key] = fn
+        return fn
+
+    def _build(self):
+        fn = FORWARD_FNS[self.forward]
+        if self.forward in PALLAS_PATHS:
+            fn = functools.partial(fn, interpret=self.interpret)
+        cfg = self.cfg
+
+        def call(params, x):
+            return fn(params, cfg, x)
+
+        if self.mesh is not None:
+            call = shard_map_compat(call, self.mesh,
+                                    in_specs=(P(), P("data")),
+                                    out_specs=P("data"))
+        return jax.jit(functools.partial(call, self.params))
+
+    @property
+    def cache_size(self) -> int:
+        return len(self._cache)
+
+    def bucket_for(self, n_events: int) -> int:
+        """Smallest bucket holding ``n_events`` (largest if none do)."""
+        return autotune.bucket_for(self.bucket_sizes, n_events)
+
+    def warm(self, buckets=None) -> None:
+        """Pre-compile (and pre-run once) the given buckets — compile cost
+        paid before traffic arrives, not on the first unlucky request."""
+        c = self.cfg
+        for b in buckets if buckets is not None else self.bucket_sizes:
+            x = np.zeros((b, c.n_objects, c.n_features), np.float32)
+            jax.block_until_ready(self.compiled_for(b)(jnp.asarray(x)))
+
+    # -- inference ----------------------------------------------------------
+
+    def _pad(self, x: np.ndarray, bucket: int) -> np.ndarray:
+        n = x.shape[0]
+        if n == bucket:
+            return x
+        return np.concatenate(
+            [x, np.zeros((bucket - n, *x.shape[1:]), x.dtype)], axis=0)
+
+    def infer(self, x, *, record: bool = True) -> np.ndarray:
+        """Classify ``x`` (n, N_o, P): pad to bucket, dispatch, slice back.
+
+        Requests larger than the top bucket are chunked through it.
+        """
+        x = np.asarray(x)
+        top = self.bucket_sizes[-1]
+        outs = []
+        for i in range(0, x.shape[0], top):
+            chunk = x[i:i + top]
+            bucket = self.bucket_for(chunk.shape[0])
+            fn = self.compiled_for(bucket)
+            t0 = time.perf_counter()
+            out = fn(jnp.asarray(self._pad(chunk, bucket)))
+            jax.block_until_ready(out)
+            t1 = time.perf_counter()
+            if record:
+                self.metrics.record_batch(t1 - t0, chunk.shape[0], bucket)
+                self.metrics.record_wall(t1 - t0, chunk.shape[0])
+            outs.append(np.asarray(out)[:chunk.shape[0]])
+        return np.concatenate(outs, axis=0)
+
+    def run_plan(self, plan) -> dict:
+        """Execute one :class:`~repro.serving.batcher.BatchPlan`; returns
+        ``{rid: (n_i, n_targets) logits}`` reassembled per request."""
+        logits = self.infer(plan.x)
+        out: dict[int, list] = {}
+        for rid, start, stop in plan.requests:
+            out.setdefault(rid, []).append(logits[start:stop])
+        return {rid: np.concatenate(parts, axis=0)
+                for rid, parts in out.items()}
+
+    def run_stream(self, stream, *, warmup: int = 2) -> dict:
+        """Pump a fixed-size batch stream through the double-buffered feed
+        loop (the trigger CLI's hot path).  All batches must share one
+        size; each is padded to its ladder bucket before dispatch."""
+        stream = list(stream)
+        if not stream:
+            return {"latencies": [], "events": 0, "wall_s": 0.0,
+                    "bucket": None, "kgps": float("nan")}
+        sizes = {b.shape[0] for b in stream}
+        if len(sizes) != 1:
+            raise ValueError(f"stream batches differ in size: {sorted(sizes)}")
+        n_valid = sizes.pop()
+        bucket = self.bucket_for(n_valid)
+        fwd = self.compiled_for(bucket)
+        padded = [self._pad(np.asarray(b), bucket) for b in stream]
+        lat, _, wall = serve_stream(fwd, padded, warmup=warmup)
+        # KGPS counts VALID events only — padding rows are not throughput.
+        events = n_valid * len(lat)
+        for t in lat:
+            self.metrics.record_batch(t, n_valid, bucket)
+        self.metrics.record_wall(wall, events)
+        return {"latencies": lat, "events": events, "wall_s": wall,
+                "bucket": bucket, "kgps": kgps(events, wall)}
+
+    # -- roofline context ----------------------------------------------------
+
+    def roofline(self, buckets=None, *, compute_bytes: int = 2) -> dict:
+        """TPUModel step-time context per bucket for this path's level."""
+        level = codesign.PATH_FUSED_LEVELS.get(self.forward, "none")
+        return codesign.bucket_roofline(
+            self.cfg, buckets if buckets is not None else self.bucket_sizes,
+            fused=level, compute_bytes=compute_bytes,
+            chips=max(self.n_shards, 1))

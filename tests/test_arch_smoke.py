@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import GNNConfig, MoEConfig, RecsysConfig, \
+from repro.configs.base import MoEConfig, RecsysConfig, \
     TransformerConfig
 from repro.configs.registry import ALL_ARCHS, get_arch
 from repro.models import recsys as fm_lib

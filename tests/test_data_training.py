@@ -8,8 +8,8 @@ import pytest
 from repro.data import graphs, jets, lm_data, recsys_data
 from repro.data.neighbor_sampler import (
     CSRGraph, minibatch_stream, sample_subgraph, static_budget)
-from repro.training import make_optimizer, init_state, make_train_step
-from repro.training.schedule import SCHEDULES, warmup_cosine, wsd
+from repro.training import make_optimizer, make_train_step
+from repro.training.schedule import warmup_cosine, wsd
 
 
 # --- neighbor sampler --------------------------------------------------------

@@ -1,12 +1,20 @@
 """Multi-device distribution tests, run in subprocesses with 8 fake CPU
 devices (this process must keep seeing 1 device — see conftest note)."""
 
-import json
+import os
 import subprocess
 import sys
 import textwrap
 
-import pytest
+
+def subprocess_env() -> dict:
+    """Minimal env for test subprocesses.  JAX_PLATFORMS is passed through
+    when set: without it a libtpu-equipped container spends 60+ s per
+    subprocess probing for a TPU before falling back to CPU."""
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+    if "JAX_PLATFORMS" in os.environ:
+        env["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
+    return env
 
 
 def run_py(code: str, timeout=600) -> str:
@@ -17,8 +25,7 @@ def run_py(code: str, timeout=600) -> str:
             + textwrap.dedent(code))
     out = subprocess.run(
         [sys.executable, "-c", prog], capture_output=True, text=True,
-        timeout=timeout, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"},
+        timeout=timeout, env=subprocess_env(),
         cwd="/root/repo")
     assert out.returncode == 0, out.stderr[-3000:]
     return out.stdout
@@ -72,7 +79,7 @@ def test_ef_compressed_psum_convergence():
         import jax, jax.numpy as jnp, numpy as np
         from functools import partial
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        from repro.parallel.sharding import shard_map_compat as shard_map
         from repro.training.grad_compression import ef_compressed_psum
 
         mesh = jax.make_mesh((8,), ("data",))
@@ -86,7 +93,7 @@ def test_ef_compressed_psum_convergence():
 
         @jax.jit
         @partial(shard_map, mesh=mesh, in_specs=(P(), P("data"), P("data")),
-                 out_specs=(P(), P("data")), check_vma=False)
+                 out_specs=(P(), P("data")))
         def compressed_step(w, xs, resid):
             g = local_grad(w, xs)
             gm, new_r = ef_compressed_psum({"g": g}, {"g": resid[0]}, "data")
@@ -94,7 +101,7 @@ def test_ef_compressed_psum_convergence():
 
         @jax.jit
         @partial(shard_map, mesh=mesh, in_specs=(P(), P("data")),
-                 out_specs=P(), check_vma=False)
+                 out_specs=P())
         def exact_step(w, xs):
             return jax.lax.pmean(local_grad(w, xs), "data")
 
@@ -150,7 +157,7 @@ def test_train_driver_crash_restart():
     step-25 checkpoint and finishes."""
     import tempfile, os
     with tempfile.TemporaryDirectory() as td:
-        env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+        env = subprocess_env()
         cmd = [sys.executable, "-m", "repro.launch.train",
                "--arch", "jedinet-30p", "--steps", "60", "--batch", "32",
                "--ckpt-dir", td, "--ckpt-every", "25"]

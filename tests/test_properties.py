@@ -1,16 +1,15 @@
 """Hypothesis property tests on the system's invariants."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
-
 from repro.core import adjacency
 from repro.models.gnn import segment_ops as seg
 from repro.models.gnn import so3
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 
 settings.register_profile("ci", max_examples=25, deadline=None)

@@ -11,7 +11,6 @@ tests/test_multidevice.py for the subprocess-based version).
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

@@ -1,0 +1,114 @@
+"""launch.trigger_serve: the double-buffered serve_stream loop edge cases
+and the thin-CLI-over-engine entry point."""
+
+import jax
+import numpy as np
+
+from repro.launch import trigger_serve
+from repro.launch.trigger_serve import make_stream, serve_stream
+from repro.serving import ServingMetrics
+
+
+def _identity_fwd():
+    """A jitted async-dispatch stand-in for a forward path."""
+    return jax.jit(lambda x: x * 2.0)
+
+
+def _stream(n_batches, batch=4):
+    return [np.full((batch, 3), float(i), np.float32)
+            for i in range(n_batches)]
+
+
+def test_serve_stream_warmup_longer_than_stream_is_empty_stats():
+    """warmup >= stream length: every batch is warmup — empty stats, no
+    crash, and the degenerate wall stays 0 (callers print 'too short')."""
+    for n in (0, 1, 2):
+        lat, events, wall = serve_stream(_identity_fwd(), _stream(n),
+                                         warmup=2)
+        assert lat == []
+        assert events == 0
+        if n == 0:
+            assert wall == 0.0
+
+
+def test_serve_stream_excludes_warmup_from_accounting():
+    fwd = _identity_fwd()
+    lat, events, wall = serve_stream(fwd, _stream(7, batch=5), warmup=2)
+    assert len(lat) == 5                  # 7 batches - 2 warmup
+    assert events == 5 * 5                # KGPS accounting skips warmup rows
+    assert wall > 0
+    assert all(t > 0 for t in lat)
+
+
+def test_serve_stream_single_batch_stream():
+    """The prefetch loop must handle a 1-batch stream: the primed transfer
+    is the only batch, and with warmup=0 it is measured — including a
+    positive wall time so KGPS stays finite."""
+    fwd = _identity_fwd()
+    lat, events, wall = serve_stream(fwd, _stream(1, batch=3), warmup=0)
+    assert len(lat) == 1
+    assert events == 3
+    assert wall > 0.0
+
+
+def test_serve_stream_records_into_metrics():
+    m = ServingMetrics()
+    serve_stream(_identity_fwd(), _stream(6, batch=4), warmup=2,
+                 metrics=m, bucket=8)
+    snap = m.snapshot()
+    assert snap["batches"] == 4
+    assert snap["events"] == 16
+    assert snap["buckets"] == [8]
+
+
+def test_serve_stream_computes_through_the_pipeline():
+    """Double buffering must not drop or reorder batches."""
+    fwd = _identity_fwd()
+    stream = _stream(4, batch=2)
+    outs = []
+    orig = jax.device_put
+
+    def capture(x):
+        d = orig(x)
+        outs.append(np.asarray(x)[0, 0])
+        return d
+
+    jax.device_put, saved = capture, jax.device_put
+    try:
+        serve_stream(fwd, stream, warmup=0)
+    finally:
+        jax.device_put = saved
+    assert outs == [0.0, 1.0, 2.0, 3.0]
+
+
+def test_make_stream_shapes():
+    rng = np.random.RandomState(0)
+    stream = make_stream(rng, 3, batch=6, n_objects=8, n_features=16)
+    assert len(stream) == 3
+    assert all(b.shape == (6, 8, 16) and b.dtype == np.float32
+               for b in stream)
+
+
+def test_cli_main_reports_stats_through_engine(capsys):
+    trigger_serve.main(["--forward", "sr", "--n-objects", "8",
+                        "--batch", "8", "--batches", "5", "--warmup", "1"])
+    out = capsys.readouterr().out
+    assert "sustained" in out and "KGPS" in out
+    assert "p50" in out and "p99" in out
+    assert "roofline" in out and "level=none" in out
+
+
+def test_cli_main_short_stream_prints_hint(capsys):
+    trigger_serve.main(["--forward", "sr", "--n-objects", "8",
+                        "--batch", "4", "--batches", "2"])
+    out = capsys.readouterr().out
+    assert "too short" in out
+
+
+def test_cli_main_fused_full_interpret(capsys):
+    """The acceptance path, shrunk: fused_full through the engine on CPU."""
+    trigger_serve.main(["--forward", "fused_full", "--interpret",
+                        "--n-objects", "8", "--batch", "4", "--batches", "4",
+                        "--warmup", "1"])
+    out = capsys.readouterr().out
+    assert "KGPS" in out and "level=full" in out
