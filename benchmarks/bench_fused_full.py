@@ -1,11 +1,14 @@
 """Fused-path trajectory benchmark: per-path wall-clock + modeled HBM bytes.
 
-Measures every FORWARD_FNS path on the paper's 30p / 50p configs and pairs
-each wall-clock with the TPUModel's modeled HBM traffic at its fusion
-level ("none" for the XLA paths, "edge" for the edge-only kernel, "full"
-for the whole-network kernel).  ``run()`` also fills a machine-readable
-payload that ``benchmarks/run.py`` writes to ``BENCH_fused.json`` so the
-perf trajectory is tracked across PRs.
+Measures every registered forward path (:mod:`repro.core.paths`) on the
+paper's 30p / 50p configs and pairs each wall-clock with the TPUModel's
+modeled HBM traffic at the path's declared fusion level and weight
+precision — both read off the :class:`~repro.core.paths.PathSpec`, so a
+newly registered path (e.g. the int8 quantized one) lands in this
+benchmark, the emitted ``BENCH_fused.json`` and the CI regression gate
+with zero edits here.  Each path's numerical error against its own
+spec-declared reference fn rides along in the payload so the JSON
+records correctness next to speed.
 
 Pallas paths run in interpret mode off-TPU: their wall-clock is a CPU
 emulation (flagged ``"interpret": true`` in the JSON) — the HBM model is
@@ -17,34 +20,29 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import row, time_fn
-from repro.core import codesign, interaction_net as inet
-
-# forward-path name -> TPUModel fusion level (single source of truth in
-# core.codesign; the serving engine uses the same mapping)
-PATH_LEVELS = codesign.PATH_FUSED_LEVELS
-
-_INTERPRET_PATHS = ("fused", "fused_full")
+from benchmarks.common import row, select_paths, time_fn
+from repro.core import codesign, paths
+from repro.core import interaction_net as inet
 
 # filled by run(); benchmarks/run.py serializes it to BENCH_fused.json
 JSON_PAYLOAD: dict = {}
 
 
-def _measure(name, params, cfg, x, interpret: bool):
-    if name in _INTERPRET_PATHS:
-        call = jax.jit(lambda p, x_: inet.FORWARD_FNS[name](
-            p, cfg, x_, interpret=interpret))
+def _measure(spec, params, cfg, x, interpret: bool):
+    if spec.pallas:
+        call = jax.jit(lambda p, x_: spec.forward(p, cfg, x_,
+                                                  interpret=interpret))
     else:
-        call = jax.jit(lambda p, x_: inet.FORWARD_FNS[name](p, cfg, x_))
+        call = jax.jit(lambda p, x_: spec.forward(p, cfg, x_))
     iters = 3 if interpret else 10
-    us = time_fn(call, params, x, warmup=1, iters=iters)
-    return us
+    return time_fn(call, params, x, warmup=1, iters=iters)
 
 
 def run():
     on_tpu = jax.default_backend() == "tpu"
     rows = []
     payload = {"schema": 1, "backend": jax.default_backend(), "configs": {}}
+    names = select_paths()                 # default: the whole registry
 
     for cname, n_o, batch, ibatch in (("30p", 30, 256, 16),
                                       ("50p", 50, 128, 8)):
@@ -52,34 +50,39 @@ def run():
         params = inet.init(jax.random.PRNGKey(0), cfg, scale="lecun")
         entry = {"n_objects": n_o, "paths": {}}
 
-        for name, level in PATH_LEVELS.items():
-            interpret = (name in _INTERPRET_PATHS) and not on_tpu
+        for name in names:
+            spec = paths.get(name)
+            pparams = spec.prepare_params(params)
+            interpret = spec.pallas and not on_tpu
             b = ibatch if interpret else batch
             x = jax.random.normal(jax.random.PRNGKey(1), (b, n_o, 16))
-            us = _measure(name, params, cfg, x, interpret)
-            hbm = codesign.TPUModel.hbm_bytes(cfg, batch, 2, fused=level)
+            us = _measure(spec, pparams, cfg, x, interpret)
+            hbm = codesign.TPUModel.hbm_bytes(
+                cfg, batch, 2, spec.fused_level,
+                weight_bytes=spec.weight_bytes)
+            # path-vs-own-reference error rides along (the spec contract:
+            # both fns see the transformed params)
+            xq = jax.random.normal(jax.random.PRNGKey(2), (8, n_o, 16))
+            fwd = (spec.forward(pparams, cfg, xq, interpret=True)
+                   if spec.pallas and not on_tpu
+                   else spec.forward(pparams, cfg, xq))
+            err = float(jnp.max(jnp.abs(fwd - spec.ref(pparams, cfg, xq))))
             entry["paths"][name] = {
                 "wall_us": us,
                 "batch": b,
                 "interpret": interpret,
-                "fused_level": level,
+                "fused_level": spec.fused_level,
+                "quantized": spec.quantized,
                 "modeled_hbm_bytes": hbm,
                 "modeled_hbm_batch": batch,
+                "max_abs_err_vs_ref": err,
+                "ref_tolerance": spec.tolerance,
             }
             rows.append(row(
                 f"fused_paths_{cname}_{name}", us,
-                f"level={level} modeled_hbm={hbm / 1e6:.2f}MB"
+                f"level={spec.fused_level} modeled_hbm={hbm / 1e6:.2f}MB "
+                f"err={err:.1e}"
                 f"{' (interpret)' if interpret else ''}"))
-
-        # equivalence check rides along so the JSON records correctness too
-        xq = jax.random.normal(jax.random.PRNGKey(2), (8, n_o, 16))
-        sr = inet.forward_sr(params, cfg, xq)
-        full = inet.forward_fused_full(params, cfg, xq,
-                                       interpret=not on_tpu)
-        err = float(jnp.max(jnp.abs(sr - full)))
-        entry["fused_full_max_abs_err_vs_sr"] = err
-        rows.append(row(f"fused_paths_{cname}_allclose", 0.0,
-                        f"max_err {err:.1e}"))
         payload["configs"][cname] = entry
 
     JSON_PAYLOAD.clear()

@@ -21,9 +21,9 @@ def run():
     for name, n_o in (("30p", 30), ("50p", 50)):
         cfg = inet.JediNetConfig(n_objects=n_o, n_features=16)
         pt = codesign.TPUDesignPoint(cfg=cfg, batch=1024)
-        unfused = codesign.TPUModel.evaluate(pt, fused="none")
-        fused = codesign.TPUModel.evaluate(pt, fused="edge")
-        full = codesign.TPUModel.evaluate(pt, fused="full")
+        unfused = codesign.TPUModel.evaluate(pt, "none")
+        fused = codesign.TPUModel.evaluate(pt, "edge")
+        full = codesign.TPUModel.evaluate(pt, "full")
         saved = unfused["hbm_bytes"] - fused["hbm_bytes"]
         rows.append(row(
             f"fig10_fusion_hbm_{name}", fused["step_us"],

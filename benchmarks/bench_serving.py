@@ -18,14 +18,16 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import row, select_paths
 from repro.core import interaction_net as inet
 from repro.serving import ServingEngine
 
 JSON_NAME = "BENCH_serving.json"
 JSON_PAYLOAD: dict = {}
 
-# serving-relevant paths: the XLA production fallback and both kernels
+# default subset: the XLA production fallback + the whole-network kernel
+# (off-TPU interpret emulation is slow; `benchmarks.run --paths all`
+# widens this to every registered path, e.g. for a TPU baseline run)
 PATHS = ("sr_split", "fused_full")
 
 
@@ -78,7 +80,7 @@ def run():
         cfg = inet.JediNetConfig(n_objects=n_o, n_features=16)
         params = inet.init(jax.random.PRNGKey(0), cfg, scale="lecun")
         entry = {"n_objects": n_o, "paths": {}}
-        for path in PATHS:
+        for path in select_paths(default=PATHS):
             res = _bench_engine(cfg, params, path, on_tpu=on_tpu)
             entry["paths"][path] = res
             for bucket, b in res["buckets"].items():

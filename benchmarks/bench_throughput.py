@@ -36,7 +36,7 @@ def run():
         # TPU roofline projection (single v5e chip, fused):
         # 1000 jets per step of step_us microseconds.
         tpu = codesign.TPUModel.evaluate(
-            codesign.TPUDesignPoint(cfg=cfg, batch=1000), fused=True)
+            codesign.TPUDesignPoint(cfg=cfg, batch=1000), "edge")
         kgps_tpu = 1000 / (tpu["step_us"] * 1e-6) / 1e3
         rows.append(row(f"table3_tpu_roofline_{name}", tpu["step_us"],
                         f"{kgps_tpu:.0f} KGPS roofline-projected "

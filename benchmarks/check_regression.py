@@ -24,8 +24,14 @@ truth" per EXPERIMENTS.md) get ``--interpret-slack`` (default 2x) on
 top of the threshold: their pure-Python wall-clocks track neither BLAS
 nor XLA yardsticks.  New paths/buckets (no baseline yet) and removed
 ones are reported but never fail the gate — growth is not a
-regression.  KGPS drops are reported as warnings only (KGPS is the
-inverse of a wall-clock already gated).
+regression.  Passing ``--bootstrap`` (env ``BENCH_BOOTSTRAP=1``) goes
+one further: entries a fresh run has but the committed baseline lacks
+— e.g. a path newly registered in the forward-path registry — are
+merged INTO the baseline file, speed-normalized to the baseline
+machine's calibration, so the very next run gates them; commit the
+updated BENCH_*.json in the same PR that adds the path.  KGPS drops
+are reported as warnings only (KGPS is the inverse of a wall-clock
+already gated).
 
 Intentional baseline refresh: regenerate the committed files with
 
@@ -82,6 +88,53 @@ def _speed_scale(fresh, base) -> float:
     return 1.0
 
 
+def _scale_times(node, scale):
+    """Deep-copy ``node`` with measured wall-clocks normalized from
+    fresh-machine to baseline-machine units (divide ``*_us`` by the
+    speed scale, multiply ``kgps``).  ``modeled_*`` fields are analytic
+    — machine-independent — and pass through untouched."""
+    out = {}
+    for k, v in node.items():
+        if isinstance(v, dict):
+            out[k] = _scale_times(v, scale)
+        elif (isinstance(v, (int, float)) and not isinstance(v, bool)
+              and k.endswith("_us") and not k.startswith("modeled_")):
+            out[k] = v / scale
+        elif k == "kgps" and isinstance(v, (int, float)):
+            out[k] = v * scale
+        else:
+            out[k] = v
+    return out
+
+
+def bootstrap_new_entries(fresh, base, scale) -> list:
+    """Merge configs/paths/buckets present in ``fresh`` but missing from
+    ``base`` (in place), speed-normalized; returns the added keys.
+
+    This is how a newly registered forward path gets its first committed
+    baseline: the gate seeds the entry instead of flagging it forever.
+    Existing entries are never touched — a regression still regresses.
+    """
+    added = []
+    for cname, c in fresh.get("configs", {}).items():
+        bconfigs = base.setdefault("configs", {})
+        if cname not in bconfigs:
+            bconfigs[cname] = {k: v for k, v in c.items() if k != "paths"}
+            bconfigs[cname]["paths"] = {}
+        bpaths = bconfigs[cname].setdefault("paths", {})
+        for pname, p in c.get("paths", {}).items():
+            if pname not in bpaths:
+                bpaths[pname] = _scale_times(p, scale)
+                added.append(f"{cname}/{pname}")
+            elif "buckets" in p:
+                bbuckets = bpaths[pname].setdefault("buckets", {})
+                for bname, b in p["buckets"].items():
+                    if bname not in bbuckets:
+                        bbuckets[bname] = _scale_times(b, scale)
+                        added.append(f"{cname}/{pname}/b{bname}")
+    return added
+
+
 def compare(fresh, base, iterate, metrics, max_regress, *, scale=1.0,
             interpret_slack=1.0, warn_metric=None,
             warn_higher_is_better=False):
@@ -100,7 +153,7 @@ def compare(fresh, base, iterate, metrics, max_regress, *, scale=1.0,
             infos.append(f"{key}: dropped (no fresh entry)")
             continue
         if b is None:
-            infos.append(f"{key}: new (no baseline) "
+            infos.append(f"{key}: new (no baseline; --bootstrap seeds it) "
                          f"{metrics[0]}={f.get(metrics[0], float('nan')):.2f}")
             continue
         if f.get("interpret") != b.get("interpret"):
@@ -146,20 +199,32 @@ def main(argv=None) -> int:
                          "(off-TPU Pallas emulation) entries")
     ap.add_argument("--allow-regress", action="store_true",
                     help="report regressions but exit 0 (baseline refresh)")
+    ap.add_argument("--bootstrap", action="store_true",
+                    help="seed baseline entries for fresh paths/buckets "
+                         "that have none yet (write the baseline file)")
     args = ap.parse_args(argv)
     allow = args.allow_regress or os.environ.get("BENCH_REGRESS_OK") == "1"
+    bootstrap = args.bootstrap or os.environ.get("BENCH_BOOTSTRAP") == "1"
 
     all_failures = []
     for name in PAIRS:
+        base_path = os.path.join(args.baseline_dir, name)
         fresh = _load(os.path.join(args.fresh_dir, name))
-        base = _load(os.path.join(args.baseline_dir, name))
+        base = _load(base_path)
         print(f"== {name} ==")
         if fresh is None:
             print(f"  FAIL: no fresh file in {args.fresh_dir}")
             all_failures.append(f"{name}: missing fresh file")
             continue
         if base is None:
-            print("  no committed baseline — skipping (first run?)")
+            if bootstrap:
+                with open(base_path, "w") as f:
+                    json.dump(fresh, f, indent=2, sort_keys=True)
+                print(f"  no committed baseline — bootstrapped {base_path} "
+                      "from the fresh run; commit it")
+            else:
+                print("  no committed baseline — skipping "
+                      "(first run? --bootstrap seeds one)")
             continue
         if not _comparable(fresh, base):
             print(f"  backends differ (fresh={fresh.get('backend')} "
@@ -185,6 +250,15 @@ def main(argv=None) -> int:
         for line in fails:
             print(f"  REGRESSION: {line}")
         all_failures.extend(f"{name}: {line}" for line in fails)
+        if bootstrap:
+            added = bootstrap_new_entries(fresh, base, scale)
+            if added:
+                with open(base_path, "w") as f:
+                    json.dump(base, f, indent=2, sort_keys=True)
+                print(f"  bootstrapped {len(added)} baseline entr"
+                      f"{'y' if len(added) == 1 else 'ies'} into "
+                      f"{base_path} (speed-normalized): "
+                      f"{', '.join(added)} — commit this file")
 
     if all_failures:
         print(f"\n{len(all_failures)} perf regression(s) "

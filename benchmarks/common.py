@@ -7,6 +7,31 @@ import time
 import jax
 import numpy as np
 
+# Forward-path selection for path-parametrized benchmarks, set by
+# ``benchmarks.run --paths``: None = each module's default subset,
+# ["all"] = the whole registry, anything else = explicit names.
+PATH_FILTER: list[str] | None = None
+
+
+def select_paths(default=None) -> list[str]:
+    """Resolve the benchmark's path list against the registry.
+
+    ``default`` is the module's own subset (None = whole registry);
+    the ``--paths`` CLI filter overrides it.  Names are validated
+    through ``paths.get`` so a typo fails loudly, not by measuring
+    nothing.
+    """
+    from repro.core import paths
+    if PATH_FILTER is None:
+        names = list(default) if default is not None else paths.available()
+    elif PATH_FILTER == ["all"]:
+        names = paths.available()
+    else:
+        names = list(PATH_FILTER)
+    for n in names:
+        paths.get(n)
+    return names
+
 
 def calibration_us(iters: int = 12) -> float:
     """Median wall time of a fixed jitted XLA workload (microseconds).

@@ -1,6 +1,13 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig8,serving,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig8,serving,...] \
+        [--paths all|name,name,...]
+
+``--paths`` steers the path-parametrized benchmarks (``fused_paths``,
+``serving``): ``all`` enumerates every path in the forward-path
+registry (:mod:`repro.core.paths`) — a newly registered path appears
+in the emitted BENCH_*.json with no benchmark edits — while an
+explicit comma list pins the set.  Default: each module's own subset.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
 Any benchmark module may define ``JSON_PAYLOAD`` (filled by its
@@ -20,6 +27,7 @@ import os
 import sys
 import traceback
 
+from benchmarks import common
 from benchmarks.common import calibration_us, print_rows
 
 BENCHES = {
@@ -46,8 +54,13 @@ def main() -> None:
                     help="directory for BENCH_*.json payloads")
     ap.add_argument("--json-out", default=None,
                     help=f"override path for {_FUSED_JSON} (legacy)")
+    ap.add_argument("--paths", default=None,
+                    help="forward paths for path-parametrized benchmarks: "
+                         "'all' (whole registry) or comma-separated names")
     args = ap.parse_args()
     keys = args.only.split(",") if args.only else list(BENCHES)
+    if args.paths:
+        common.PATH_FILTER = args.paths.split(",")
 
     import importlib
     all_rows = []

@@ -2,11 +2,13 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-1. Build JEDI-net-30p, run the dense-MMM baseline of [5].
-2. Run the strength-reduced path (paper Sec 3.1-3.3) — same numbers,
-   no adjacency matrices, no MMM FLOPs.
-3. Run the fused Pallas kernel (paper Sec 3.5, interpret mode on CPU).
-4. Print the Fig-8 op-count reduction and a wall-clock comparison.
+1. Build JEDI-net-30p and enumerate the forward-path registry
+   (`repro.core.paths`) — every optimization tier of the paper is one
+   registered `PathSpec`, from the dense-MMM baseline of [5] to the
+   int8-quantized whole-network kernel.
+2. Run each registered path against its own declared reference fn
+   (Pallas kernels in interpret mode on CPU) at its declared tolerance.
+3. Print the Fig-8 op-count reduction and a wall-clock comparison.
 """
 
 import time
@@ -14,25 +16,28 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import adjacency, interaction_net as inet
+from repro.core import adjacency, interaction_net as inet, paths
 
 
 def main():
     cfg = inet.JediNetConfig(n_objects=30, n_features=16)
-    params = inet.init(jax.random.PRNGKey(0), cfg)
+    params = inet.init(jax.random.PRNGKey(0), cfg, scale="lecun")
     x = jax.random.normal(jax.random.PRNGKey(1), (256, 30, 16))
 
-    dense = jax.jit(lambda p, a: inet.forward_dense(p, cfg, a))
-    sr = jax.jit(lambda p, a: inet.forward_sr(p, cfg, a))
+    print("registered forward paths:\n" + paths.describe() + "\n")
 
-    out_d = dense(params, x)
-    out_s = sr(params, x)
-    err = float(jnp.max(jnp.abs(out_d - out_s)))
-    print(f"strength-reduced == dense baseline: max err {err:.2e}")
-
-    out_f = inet.forward_fused(params, cfg, x, interpret=True)
-    err_f = float(jnp.max(jnp.abs(out_s - out_f)))
-    print(f"fused Pallas kernel == strength-reduced: max err {err_f:.2e}")
+    # every path vs its own spec-declared reference (small batch: the
+    # Pallas kernels run in interpret mode on CPU)
+    xs = x[:8]
+    for name in paths.available():
+        spec = paths.get(name)
+        p = spec.prepare_params(params)
+        out = (spec.forward(p, cfg, xs, interpret=True) if spec.pallas
+               else spec.forward(p, cfg, xs))
+        err = float(jnp.max(jnp.abs(out - spec.ref(p, cfg, xs))))
+        ok = "ok" if err < spec.tolerance else "FAIL"
+        print(f"{name:>16} vs ref: max err {err:.2e} "
+              f"(tol {spec.tolerance:.0e}) {ok}")
 
     c = adjacency.mmm_op_counts(30, 16, 8)
     print(f"\nFig 8 (30p): MMM1/2 mults {c['mmm12_baseline_mults']:,} -> 0, "
@@ -40,12 +45,18 @@ def main():
           f"({c['mmm3_sr_adds']/c['mmm3_baseline_adds']*100:.1f}%), "
           f"iterations {c['iterations_baseline']} -> {c['iterations_sr']}")
 
-    for name, f in (("dense", dense), ("strength-reduced", sr)):
-        f(params, x)[0].block_until_ready()
+    # wall-clock for the XLA paths (kernel paths are TPU-targeted;
+    # interpret-mode timing on CPU says nothing)
+    print()
+    for name in paths.available(pallas=False):
+        spec = paths.get(name)
+        pparams = spec.prepare_params(params)
+        f = jax.jit(lambda p, a, s=spec: s.forward(p, cfg, a))
+        f(pparams, x).block_until_ready()
         t0 = time.perf_counter()
         for _ in range(10):
-            f(params, x).block_until_ready()
-        print(f"{name:>17}: {(time.perf_counter()-t0)/10*1e3:.2f} ms / "
+            f(pparams, x).block_until_ready()
+        print(f"{name:>16}: {(time.perf_counter()-t0)/10*1e3:.2f} ms / "
               "256-jet batch (CPU)")
 
 

@@ -18,11 +18,11 @@ from repro.core.interaction_net import (
     loss_fn,
     FORWARD_FNS,
 )
-from repro.core import codesign
+from repro.core import codesign, paths
 
 __all__ = [
     "edge_index_maps", "sender_index_matrix", "dense_relation_matrices",
     "mmm_op_counts", "JediNetConfig", "init", "forward_dense", "forward_sr",
     "forward_fused", "build_b_matrix", "aggregate_incoming", "loss_fn",
-    "FORWARD_FNS", "codesign",
+    "FORWARD_FNS", "codesign", "paths",
 ]

@@ -146,33 +146,41 @@ class TPUModel:
         f += cfg.d_e * n_e
         return f * batch
 
-    # Fusion levels of the three forward paths (normalizes the legacy bools):
-    #   "none" — unfused strength-reduced path: B and E round-trip to HBM.
-    #   "edge" — edge-only Pallas kernel: B/E stay in VMEM, but Ebar and O
-    #            still cross the kernel/XLA boundary through HBM.
-    #   "full" — whole-network kernel: weights + x in, logits out; NO
-    #            intermediate touches HBM.
-    FUSED_LEVELS = {False: "none", True: "edge",
-                    "none": "none", "edge": "edge", "full": "full"}
-
     @staticmethod
     def hbm_bytes(cfg: JediNetConfig, batch: int, compute_bytes: int,
-                  fused: bool | str = "edge") -> float:
+                  level: str = "edge", *,
+                  weight_bytes: int | None = None) -> float:
         """HBM traffic: weights once per step + activation round-trips.
 
-        ``fused`` is a :data:`FUSED_LEVELS` key; the legacy booleans map to
-        "edge" / "none".  Each level removes one tier of activation traffic
-        (this is what the fused-vs-unfused §Perf iteration measures).
+        ``level`` is a :data:`~repro.core.paths.FUSED_LEVELS` tier:
+
+        * ``"none"`` — unfused path: B and E round-trip through HBM;
+        * ``"edge"`` — edge-only kernel: B/E stay in VMEM, Ebar and O
+          still cross the kernel/XLA boundary;
+        * ``"full"`` — whole-network kernel: weights + x in, logits out.
+
+        Each tier removes one band of activation traffic (what the
+        fused-vs-unfused §Perf iteration measures).  ``weight_bytes``
+        overrides the weight precision independently of the activation
+        ``compute_bytes`` — quantized paths (int8 weights, fp32
+        accumulation) bill 1 B/weight while activations stay wide.
+
+        The legacy ``fused: bool | str`` argument is gone: ``False``
+        used to coerce surprisingly (a falsy level is not a fusion
+        statement), so anything but an exact tier name now raises.
         """
+        from repro.core.paths import FUSED_LEVELS
         from repro.nn.core import mlp_dims
-        level = TPUModel.FUSED_LEVELS[fused]
+        if level not in FUSED_LEVELS:
+            raise ValueError(
+                f"fused level must be one of {FUSED_LEVELS}, got {level!r}")
         cfgs = [
             mlp_dims(2 * cfg.n_features, list(cfg.fr_hidden), cfg.d_e),
             mlp_dims(cfg.n_features + cfg.d_e, list(cfg.fo_hidden), cfg.d_o),
             mlp_dims(cfg.d_o, list(cfg.phi_hidden), cfg.n_targets),
         ]
         w = sum((din * dout + dout) for dims in cfgs for din, dout in dims)
-        traffic = w * compute_bytes
+        traffic = w * (compute_bytes if weight_bytes is None else weight_bytes)
         n_e, n_o = cfg.n_edges, cfg.n_objects
         act = n_o * cfg.n_features                     # input
         act += cfg.n_targets                           # logits
@@ -185,9 +193,11 @@ class TPUModel:
         return traffic + act * batch * compute_bytes
 
     @classmethod
-    def evaluate(cls, pt: TPUDesignPoint, fused: bool | str = "edge") -> dict:
+    def evaluate(cls, pt: TPUDesignPoint, level: str = "edge", *,
+                 weight_bytes: int | None = None) -> dict:
         fl = cls.flops(pt.cfg, pt.batch)
-        by = cls.hbm_bytes(pt.cfg, pt.batch, pt.compute_bytes, fused=fused)
+        by = cls.hbm_bytes(pt.cfg, pt.batch, pt.compute_bytes, level,
+                           weight_bytes=weight_bytes)
         t_c = fl / (pt.chips * TPU_V5E_BF16_FLOPS)
         t_m = by / (pt.chips * TPU_V5E_HBM_BPS)
         return {
@@ -198,23 +208,15 @@ class TPUModel:
             "step_us": max(t_c, t_m) * 1e6,
             "bound": "compute" if t_c >= t_m else "memory",
             "arithmetic_intensity": fl / by,
-            "fused_level": cls.FUSED_LEVELS[fused],
+            "fused_level": level,
+            "weight_bytes": pt.compute_bytes if weight_bytes is None
+            else weight_bytes,
         }
 
 
-# Fusion level each FORWARD_FNS path actually achieves (what the serving
-# tier and the trajectory benchmarks should model it as).
-PATH_FUSED_LEVELS = {
-    "dense": "none",
-    "sr": "none",
-    "sr_split": "none",
-    "fused": "edge",
-    "fused_full": "full",
-}
-
-
-def bucket_roofline(cfg: JediNetConfig, buckets, *, fused: bool | str = "full",
-                    compute_bytes: int = 2, chips: int = 1) -> dict:
+def bucket_roofline(cfg: JediNetConfig, buckets, *, level: str = "full",
+                    compute_bytes: int = 2, chips: int = 1,
+                    weight_bytes: int | None = None) -> dict:
     """TPUModel roofline per serving bucket size.
 
     The batcher pads requests up to ladder buckets, so the question "what
@@ -223,12 +225,17 @@ def bucket_roofline(cfg: JediNetConfig, buckets, *, fused: bool | str = "full",
     fixed HBM bill — while large buckets amortize weights and go
     compute-bound.  Returns ``{bucket: evaluate() dict + per_event_us}``;
     the crossover is where the deadline/throughput trade-off lives.
+
+    ``level`` / ``weight_bytes`` normally come off a
+    :class:`~repro.core.paths.PathSpec` (``spec.roofline_for`` wraps
+    this fn) so the model always matches what the path actually fuses.
     """
     out = {}
     for b in buckets:
         m = TPUModel.evaluate(
             TPUDesignPoint(cfg=cfg, batch=int(b), chips=chips,
-                           compute_bytes=compute_bytes), fused=fused)
+                           compute_bytes=compute_bytes), level,
+            weight_bytes=weight_bytes)
         m["per_event_us"] = m["step_us"] / int(b)
         out[int(b)] = m
     return out
@@ -277,7 +284,7 @@ def explore(base: JediNetConfig,
             dsp_slack: float = 1.0,
             accuracy_proxy: Callable[[JediNetConfig], float] | None = None,
             max_candidates: int | None = None,
-            fused_level: bool | str = "full",
+            fused_level: str = "full",
             **space_kw) -> dict:
     """Run the co-design DSE.
 
@@ -309,7 +316,7 @@ def explore(base: JediNetConfig,
             continue
         # model the best available kernel (the whole-network fusion) by
         # default; pass fused_level="edge"/"none" to study the others.
-        tpu = TPUModel.evaluate(TPUDesignPoint(cfg=cfg), fused=fused_level)
+        tpu = TPUModel.evaluate(TPUDesignPoint(cfg=cfg), fused_level)
         survivors.append(Candidate(cfg=cfg, n_fr=n_fr, r_fo=r_fo,
                                    fpga=fpga, tpu=tpu))
 

@@ -1,0 +1,114 @@
+"""int8 weight-quantized whole-network fused path.
+
+The FPGA side of the paper is a fixed-point datapath: ap_fixed weights
+sized per layer by the quantization-aware co-design loop (Sec. 4.2).
+The TPU analogue is a quantized MXU path — weights stored in int8 with
+symmetric per-tensor scales, activations and accumulation kept in fp32.
+At trigger-tier batch sizes the step is weight-traffic bound (see
+EXPERIMENTS.md §Roofline), so 4 bytes -> 1 byte of weight HBM is the
+eventual latency lever, exactly like the paper trading DSP precision
+for initiation interval.  TODAY the win is storage/checkpoint size and
+the proven registry extension point: this wrapper dequantizes at the
+HBM boundary (the fused kernel still reads fp32 weights), so the spec
+does NOT claim reduced weight traffic — moving the dequant inside the
+kernel (int8 loads into VMEM) is the ROADMAP follow-up, at which point
+``weight_bytes=1`` on the spec flips the roofline everywhere at once.
+
+This module is also the registry's proof of extension: the path is
+registered ONLY here via :func:`~repro.core.paths.register_path`, yet
+the serving engine, deadline batcher, ``trigger_serve --forward``
+choices, ``benchmarks/run.py --paths all`` and the CI regression gate
+all pick it up with zero edits — everything they need (params
+quantizer, reference fn, tolerance, roofline weight bytes) rides on the
+:class:`~repro.core.paths.PathSpec`.
+
+Quantization scheme
+-------------------
+Per weight tensor W: ``scale = max|W| / 127``; ``W_q = round(W / scale)``
+clipped to [-127, 127], stored as int8 next to the fp32 scale.  Biases
+stay fp32.  The forward dequantizes (``W_q * scale``) and runs the
+whole-network fused kernel with fp32 accumulation, so the numerics are
+bit-identical to an int8-weight MXU pass with an fp32 accumulator.  The
+reference fn sees the SAME quantized params (spec contract: ``ref`` and
+``forward`` both receive the transformed params), so the declared
+tolerance measures kernel fidelity, not quantization loss — the
+quantization loss itself is characterized in the numerics tests.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.paths import register_path
+
+#: Engine-vs-ref acceptance bar for the int8 path (fp32 accumulation:
+#: same fidelity class as the fp32 fused kernel).
+INT8_TOLERANCE = 5e-4
+
+
+def quantize_params_int8(params):
+    """Symmetric per-tensor int8 quantization of every MLP weight.
+
+    Returns a pytree of the same ``{"fr"/"fo"/"phi": {"layers": [...]}}``
+    shape with each layer's ``"w"`` replaced by the int8 tensor plus a
+    ``"w_scale"`` fp32 scalar.  Keeping the ``"w"`` key means
+    shape-driven helpers (``autotune.mlp_widths``) keep working on
+    quantized params unchanged.
+    """
+    def qlayer(layer):
+        w = jnp.asarray(layer["w"], jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-12) / 127.0
+        wq = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+        out = {"w": wq, "w_scale": scale}
+        if "b" in layer:
+            out["b"] = jnp.asarray(layer["b"], jnp.float32)
+        return out
+
+    return {name: {"layers": [qlayer(lp) for lp in mlp["layers"]]}
+            for name, mlp in params.items()}
+
+
+def dequantize_params(qparams):
+    """fp32 view of int8-quantized params (``w = w_q * w_scale``)."""
+    def dqlayer(layer):
+        out = {"w": layer["w"].astype(jnp.float32) * layer["w_scale"]}
+        if "b" in layer:
+            out["b"] = layer["b"]
+        return out
+
+    return {name: {"layers": [dqlayer(lp) for lp in mlp["layers"]]}
+            for name, mlp in qparams.items()}
+
+
+def _ref_int8(qparams, cfg, x):
+    """Reference: strength-reduced XLA forward on the dequantized weights."""
+    from repro.core.interaction_net import forward_sr
+    return forward_sr(dequantize_params(qparams), cfg, x)
+
+
+@register_path(
+    name="int8_fused_full",
+    ref=_ref_int8,
+    fused_level="full",
+    pallas=True,
+    compute_dtypes=("float32",),      # int8 weights dequantize to fp32 compute
+    transform_params=quantize_params_int8,
+    tolerance=INT8_TOLERANCE,
+    quantized=True,
+    # weight_bytes deliberately UNSET: today the dequant happens at the
+    # HBM boundary (the kernel consumes fp32 weights), so the roofline
+    # must bill fp32 weight traffic.  Set weight_bytes=1 the day the
+    # kernel loads int8 into VMEM and dequantizes on-chip (ROADMAP) —
+    # that one-line spec change flips every consumer's model at once.
+    description="int8-weight whole-network kernel, fp32 accumulation",
+)
+def forward_int8_fused_full(qparams, cfg, x, *, interpret: bool = False):
+    """Whole-network fused forward with int8-quantized weights.
+
+    ``qparams`` is the output of :func:`quantize_params_int8` (the
+    spec's params-transform hook applies it automatically wherever the
+    path is resolved through the registry).
+    """
+    from repro.kernels.fused_jedinet import ops as fused_ops
+    return fused_ops.fused_forward_full(dequantize_params(qparams), cfg, x,
+                                        interpret=interpret)

@@ -30,12 +30,14 @@ is exposed through the dense baseline for fidelity.
 from __future__ import annotations
 
 import dataclasses
+import warnings
+from collections.abc import Mapping
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import adjacency
+from repro.core import adjacency, paths
 from repro.nn import core as nn
 
 
@@ -279,18 +281,94 @@ def forward_sr_split(params, cfg: JediNetConfig, x, *, grid: bool = True):
     return logits.astype(jnp.float32)
 
 
-FORWARD_FNS = {
-    "dense": forward_dense,
-    "sr": forward_sr,
-    "sr_split": forward_sr_split,
-    "fused": forward_fused,
-    "fused_full": forward_fused_full,
-}
+# ---------------------------------------------------------------------------
+# Path registration: one PathSpec per forward path (see core/paths.py).
+# Every consumer (serving engine, batcher, CLI, benchmarks, CI gate,
+# numerics tests) discovers these through the registry.
+# ---------------------------------------------------------------------------
+
+paths.register(paths.PathSpec(
+    name="dense", forward=forward_dense, ref=forward_sr,
+    fused_level="none", tolerance=2e-4,
+    description="paper-[5] baseline: explicit Rr/Rs MMMs"))
+paths.register(paths.PathSpec(
+    name="sr", forward=forward_sr, ref=forward_dense,
+    fused_level="none", tolerance=2e-4,
+    description="strength reduction + edge-major layout (Sec 3.1-3.3)"))
+paths.register(paths.PathSpec(
+    name="sr_split", forward=forward_sr_split, ref=forward_sr,
+    fused_level="none", tolerance=2e-4,
+    description="SR + bilinear first-layer split + dense grid (XLA)"))
+paths.register(paths.PathSpec(
+    name="fused", forward=forward_fused, ref=forward_sr,
+    fused_level="edge", pallas=True, tolerance=5e-4,
+    description="Pallas edge kernel: B-construct + f_R + MMM3 in VMEM"))
+paths.register(paths.PathSpec(
+    name="fused_full", forward=forward_fused_full, ref=forward_sr,
+    fused_level="full", pallas=True, tolerance=5e-4,
+    description="whole-network Pallas kernel: x -> logits on-chip"))
+
+
+class _ForwardFnsView(Mapping):
+    """Deprecated dict-shaped view of the path registry.
+
+    The seed API exposed forward paths as a flat ``FORWARD_FNS`` dict;
+    the registry (:mod:`repro.core.paths`) is the source of truth now.
+    This live view keeps ``FORWARD_FNS[name]`` / ``in`` / iteration
+    working — including for paths registered after import — while
+    nudging callers to the registry.
+    """
+
+    def __getitem__(self, name):
+        warnings.warn(
+            "FORWARD_FNS is deprecated; use repro.core.paths.get(name) "
+            "for the full PathSpec", DeprecationWarning, stacklevel=2)
+        try:
+            spec = paths.get(name)
+        except ValueError:
+            # dict semantics: Mapping.__contains__/.get() expect KeyError
+            raise KeyError(name) from None
+        if spec.transform_params is None:
+            return spec.forward           # seed identity preserved
+        # the seed dict contract is "callable on raw init() params", so
+        # transform-requiring paths get the hook folded in (per call —
+        # acceptable for a deprecated view; bind via the registry to
+        # transform once)
+        def call(params, cfg, x, *args, **kw):
+            return spec.forward(spec.prepare_params(params), cfg, x,
+                                *args, **kw)
+        return call
+
+    def __iter__(self):
+        return iter(paths.available())
+
+    def __len__(self):
+        return len(paths.available())
+
+    def __repr__(self):
+        return f"FORWARD_FNS({', '.join(paths.available())})"
+
+
+FORWARD_FNS = _ForwardFnsView()
 
 
 def loss_fn(params, cfg: JediNetConfig, batch, *, forward: str = "sr"):
-    """Softmax cross-entropy over the 5 jet classes."""
-    logits = FORWARD_FNS[forward](params, cfg, batch["x"])
+    """Softmax cross-entropy over the 5 jet classes.
+
+    ``forward`` names any registered path; its params-transform hook
+    (e.g. int8 quantization) is applied before the forward call, and
+    Pallas-backed paths fall back to interpret mode off-TPU.
+
+    NOTE: transform hooks are inference-time.  Training THROUGH a
+    quantized path gets degenerate gradients (round() is flat — there
+    is no straight-through estimator here); train on an fp32 path and
+    quantize the trained weights at serving time.
+    """
+    spec = paths.get(forward)
+    kw = {}
+    if spec.pallas and jax.default_backend() != "tpu":
+        kw["interpret"] = True
+    logits = spec.forward(spec.prepare_params(params), cfg, batch["x"], **kw)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, batch["y"][..., None], axis=-1)[..., 0]
     acc = jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))

@@ -1,0 +1,217 @@
+"""First-class forward-path registry: one declarative API per path.
+
+The paper's co-design loop (Sec. 4.4) works because every candidate
+design exposes the same knobs — precision, fusion level, parallelism —
+through one hardware template.  This module is the software analogue:
+a :class:`PathSpec` declaratively bundles everything a forward path
+*is* — the forward fn, its numerical reference, the fusion level the
+roofline should model it at, supported compute dtypes, an optional
+params-transform hook (e.g. quantization), the VMEM working-set model
+the bucket ladder derives from, and a roofline hook — so the serving
+engine, batcher, CLI, benchmarks and CI gate all introspect ONE object
+instead of agreeing by convention across five files.
+
+Registering a path makes it appear everywhere with zero consumer
+edits::
+
+    from repro.core.paths import register_path
+
+    @register_path(name="my_path", ref=my_ref, fused_level="full",
+                   tolerance=1e-4)
+    def forward_my_path(params, cfg, x, *, interpret=False):
+        ...
+
+``paths.available()`` / ``paths.get(name)`` are the only lookups any
+consumer performs; tag filters (``available(quantized=True)``,
+``available(pallas=True)``) answer capability queries.  The legacy
+``interaction_net.FORWARD_FNS`` dict survives as a thin deprecated
+read-only view over this registry.
+
+Built-in paths live in the modules listed in :data:`_BUILTIN_MODULES`;
+they are imported lazily on first registry access so importing
+``repro.core.paths`` stays dependency-free (no jax work at import).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Sequence
+
+#: The fusion tiers a path can achieve, in increasing order (see
+#: ``codesign.TPUModel.hbm_bytes``): "none" round-trips B/E through HBM,
+#: "edge" keeps them in VMEM, "full" keeps every intermediate on-chip.
+FUSED_LEVELS = ("none", "edge", "full")
+
+
+@dataclasses.dataclass(frozen=True)
+class PathSpec:
+    """Everything one forward path is, in one declarative object.
+
+    ``forward`` / ``ref`` share the signature ``(params, cfg, x) ->
+    logits`` (Pallas-backed paths additionally accept ``interpret=``;
+    set ``pallas=True`` so consumers know to thread it).  When
+    ``transform_params`` is set, BOTH fns receive the transformed
+    params — the hook runs once, at bind time (e.g. the engine's
+    constructor), not per call.
+    """
+
+    name: str
+    forward: Callable                       # (params, cfg, x, ...) -> logits
+    ref: Callable                           # numerical oracle, same signature
+    fused_level: str = "none"               # roofline tier (FUSED_LEVELS)
+    pallas: bool = False                    # Pallas kernel: interpret= off-TPU
+    compute_dtypes: tuple = ("float32", "bfloat16")
+    transform_params: Callable | None = None   # params -> params (quantize, ...)
+    tolerance: float = 2e-4                 # max |forward - ref| in fp32
+    quantized: bool = False                 # tag: weights are sub-fp32
+    weight_bytes: int | None = None         # roofline weight precision override
+    per_sample_bytes: Callable | None = None   # (cfg, params) -> VMEM bytes/jet
+    description: str = ""
+
+    def __post_init__(self):
+        if self.fused_level not in FUSED_LEVELS:
+            raise ValueError(
+                f"path {self.name!r}: fused_level {self.fused_level!r} "
+                f"not in {FUSED_LEVELS}")
+
+    # -- hooks with defaults -------------------------------------------------
+
+    def prepare_params(self, params):
+        """Apply the params-transform hook (identity when none)."""
+        if self.transform_params is None:
+            return params
+        return self.transform_params(params)
+
+    def supports_dtype(self, compute_dtype: str) -> bool:
+        return compute_dtype in self.compute_dtypes
+
+    def bucket_bytes(self, cfg, params) -> int:
+        """Per-sample VMEM working set driving the serving bucket ladder.
+
+        Defaults to the whole-network kernel's estimate — the most
+        conservative of the fused working sets, so ladder rungs derived
+        from it are safe for every path.
+        """
+        if self.per_sample_bytes is not None:
+            return int(self.per_sample_bytes(cfg, params))
+        from repro.kernels.fused_jedinet.autotune import (
+            full_forward_bytes_per_sample, mlp_widths)
+        return full_forward_bytes_per_sample(
+            cfg.n_objects, cfg.n_features,
+            mlp_widths(params["fr"]), mlp_widths(params["fo"]),
+            mlp_widths(params["phi"]))
+
+    def roofline_for(self, cfg, buckets, *, compute_bytes: int = 2,
+                     chips: int = 1) -> dict:
+        """TPUModel roofline per bucket at this path's declared level
+        (and weight precision, for quantized paths)."""
+        from repro.core import codesign
+        return codesign.bucket_roofline(
+            cfg, buckets, level=self.fused_level,
+            compute_bytes=compute_bytes, chips=chips,
+            weight_bytes=self.weight_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, PathSpec] = {}
+
+# Modules that register built-in paths at import.  Imported lazily on
+# first registry access, so a path lives entirely in its own module and
+# still shows up in every consumer (engine, CLI, benchmarks, CI gate).
+_BUILTIN_MODULES = (
+    "repro.core.interaction_net",
+    "repro.core.int8_path",
+)
+_builtins_state = "pending"           # "pending" -> "loading" -> "done"
+
+
+def _ensure_builtins() -> None:
+    global _builtins_state
+    if _builtins_state != "pending":  # "loading": modules re-enter via register
+        return
+    _builtins_state = "loading"
+    try:
+        for mod in _BUILTIN_MODULES:
+            importlib.import_module(mod)
+    except Exception:
+        # don't latch a silently partial registry: the next registry
+        # access retries (already-imported modules are sys.modules-cached,
+        # so their register() calls don't re-run) and fails loudly again
+        _builtins_state = "pending"
+        raise
+    _builtins_state = "done"
+
+
+def register(spec: PathSpec, *, overwrite: bool = False) -> PathSpec:
+    """Register a :class:`PathSpec`; returns it for chaining."""
+    if not overwrite and spec.name in _REGISTRY:
+        raise ValueError(f"forward path {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def register_path(name: str | None = None, **fields):
+    """Decorator: register the decorated fn as a forward path.
+
+        @register_path(name="int8_fused_full", ref=..., fused_level="full")
+        def forward_int8_fused_full(params, cfg, x, *, interpret=False): ...
+
+    ``name`` defaults to the fn's ``__name__`` with a leading
+    ``forward_`` stripped.  The fn itself is returned unchanged.
+    """
+    def deco(fn):
+        pname = name or fn.__name__.removeprefix("forward_")
+        register(PathSpec(name=pname, forward=fn, **fields))
+        return fn
+    return deco
+
+
+def get(name: str) -> PathSpec:
+    """The spec for ``name``; raises ValueError listing the choices."""
+    _ensure_builtins()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown forward path {name!r}; "
+            f"available: {', '.join(sorted(_REGISTRY))}") from None
+
+
+def specs(**tags: Any) -> list[PathSpec]:
+    """All registered specs, sorted by name, filtered by spec fields.
+
+    Any :class:`PathSpec` field is a filter: ``specs(quantized=True)``,
+    ``specs(pallas=False, fused_level="full")``.  Unknown field names
+    raise (a typo'd filter silently matching nothing is worse).
+    """
+    _ensure_builtins()
+    for k in tags:
+        if k not in PathSpec.__dataclass_fields__:
+            raise ValueError(f"unknown PathSpec filter field {k!r}")
+    return [s for _, s in sorted(_REGISTRY.items())
+            if all(getattr(s, k) == v for k, v in tags.items())]
+
+
+def available(**tags: Any) -> list[str]:
+    """Names of all registered paths (sorted), filtered like :func:`specs`."""
+    return [s.name for s in specs(**tags)]
+
+
+def describe(names: Sequence[str] | None = None) -> str:
+    """Human-readable registry table (the CLI's ``--list-paths``)."""
+    rows = [get(n) for n in (names if names is not None else available())]
+    lines = [f"{'path':<16} {'level':<5} {'kernel':<7} {'dtypes':<18} "
+             f"{'tol':<7} description"]
+    for s in rows:
+        kind = "pallas" if s.pallas else "xla"
+        if s.quantized:
+            kind += "+q"
+        lines.append(
+            f"{s.name:<16} {s.fused_level:<5} {kind:<7} "
+            f"{','.join(s.compute_dtypes):<18} {s.tolerance:<7.0e} "
+            f"{s.description}")
+    return "\n".join(lines)

@@ -20,9 +20,13 @@ bucket: the engine pads to the nearest autotuner ladder rung.
 
 On CPU (CI) the pipeline degenerates to a correct but synchronous loop;
 the numbers are only meaningful on a real accelerator.  ``--forward``
-accepts any FORWARD_FNS key; ``fused_full`` is the production path, with
-``--interpret`` available (auto-enabled off-TPU) so the whole driver can
-be smoke-tested off-TPU.
+accepts any registered path (:mod:`repro.core.paths`) — the choices,
+the params transform (e.g. int8 quantization) and the roofline level
+all come off the path's ``PathSpec``, so a newly registered path is
+servable here with zero CLI edits; ``--list-paths`` prints the
+registry.  ``fused_full`` is the production path, with ``--interpret``
+available (auto-enabled off-TPU) so the whole driver can be
+smoke-tested off-TPU.
 """
 
 from __future__ import annotations
@@ -32,7 +36,8 @@ import argparse
 import jax
 import numpy as np
 
-from repro.core.interaction_net import FORWARD_FNS, JediNetConfig, init
+from repro.core import paths
+from repro.core.interaction_net import JediNetConfig, init
 from repro.data.jets import make_jets
 from repro.serving import ServingEngine, percentile, serve_stream  # noqa: F401  (serve_stream re-exported for drivers/tests)
 
@@ -55,13 +60,19 @@ def main(argv=None):
     ap.add_argument("--batches", type=int, default=40)
     ap.add_argument("--warmup", type=int, default=2)
     ap.add_argument("--forward", default="fused_full",
-                    choices=sorted(FORWARD_FNS))
+                    choices=paths.available())
     ap.add_argument("--compute-dtype", default="float32",
                     choices=["float32", "bfloat16"])
     ap.add_argument("--interpret", action="store_true",
                     help="force Pallas interpret mode (auto-enabled off-TPU)")
+    ap.add_argument("--list-paths", action="store_true",
+                    help="print the forward-path registry and exit")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.list_paths:
+        print(paths.describe())
+        return
 
     cfg = JediNetConfig(n_objects=args.n_objects, n_features=args.n_features,
                         compute_dtype=args.compute_dtype)

@@ -5,13 +5,30 @@ kernels — see engine.py for the architecture notes.
 """
 
 from repro.serving.batcher import BatchPlan, DeadlineBatcher
-from repro.serving.engine import PALLAS_PATHS, ServingEngine, serve_stream
+from repro.serving.engine import (
+    PendingPlan,
+    PendingResult,
+    ServingEngine,
+    serve_stream,
+)
 from repro.serving.metrics import ServingMetrics, kgps, percentile
+
+
+def __getattr__(name):
+    # PALLAS_PATHS is deprecated and computed from the registry on
+    # access (see engine.__getattr__) — kept out of the eager imports
+    # so `import repro.serving` doesn't force-load every path module.
+    if name == "PALLAS_PATHS":
+        from repro.serving import engine
+        return engine.PALLAS_PATHS
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "BatchPlan",
     "DeadlineBatcher",
     "PALLAS_PATHS",
+    "PendingPlan",
+    "PendingResult",
     "ServingEngine",
     "ServingMetrics",
     "kgps",

@@ -2,7 +2,8 @@
 
 The serving-tier counterpart of the paper's FPGA trigger pipeline: one
 object owning everything between "a batch of events exists on the host"
-and "logits are ready", for ANY ``FORWARD_FNS`` path:
+and "logits are ready", for ANY registered forward path
+(:mod:`repro.core.paths`):
 
 * **data-parallel sharding** — the batch axis is ``shard_map``-ped over
   the local device mesh (``launch/mesh.make_host_mesh``); each device
@@ -21,10 +22,17 @@ and "logits are ready", for ANY ``FORWARD_FNS`` path:
 * **rolling accounting** — every dispatch lands in a shared
   :class:`~repro.serving.metrics.ServingMetrics` (p50/p99/KGPS), with
   padding rows excluded from event counts.
+* **async dispatch** — :meth:`ServingEngine.infer` with ``sync=False``
+  returns a :class:`PendingResult` without blocking, so a batcher can
+  flush the next plan while this one is still on the accelerator (the
+  device-queue analogue of ``serve_stream``'s H2D double buffering).
+  ``sync=True`` (the default) is the blocking escape hatch.
 
-Roofline context per bucket comes from
-:func:`repro.core.codesign.bucket_roofline` so reported wall-clock
-always sits next to what the TPU model says the step should cost.
+Everything path-specific — forward fn, Pallas-ness, params transform
+(e.g. int8 quantization), supported compute dtypes, VMEM working set
+for the bucket ladder, roofline level — is read off the path's
+:class:`~repro.core.paths.PathSpec`; registering a new path makes it
+servable with no engine edits.
 """
 
 from __future__ import annotations
@@ -38,16 +46,32 @@ import numpy as np
 
 from jax.sharding import PartitionSpec as P
 
-from repro.core import codesign
-from repro.core.interaction_net import FORWARD_FNS
+from repro.core import paths as forward_paths
 from repro.kernels import autotune
-from repro.kernels.fused_jedinet.autotune import full_forward_bytes_per_sample
 from repro.launch.mesh import make_host_mesh
 from repro.parallel.sharding import shard_map_compat
 from repro.serving.metrics import ServingMetrics, kgps
 
-# Paths that are Pallas kernels (need interpret=... off-TPU).
-PALLAS_PATHS = ("fused", "fused_full")
+# In-flight dispatch depth for chunked infer(): enough to hide pad/H2D
+# behind compute, small enough that a huge request can't pin unbounded
+# device buffers.
+MAX_INFLIGHT_CHUNKS = 4
+
+# Retained merged busy-window intervals for overlap-safe KGPS wall
+# accounting — far more than any realistic number of concurrently
+# outstanding PendingResults, small enough that a long-running engine
+# stays O(1) per dispatch.
+_MAX_WALL_WINDOWS = 64
+
+
+def __getattr__(name):
+    # Deprecated: query the registry (``paths.available(pallas=True)``)
+    # instead.  Computed on access (PEP 562) so importing this module
+    # neither forces the builtin path modules to load nor freezes a
+    # stale snapshot before late registrations.
+    if name == "PALLAS_PATHS":
+        return tuple(forward_paths.available(pallas=True))
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def serve_stream(fwd, stream, *, warmup: int = 2, metrics=None, bucket=None):
@@ -100,6 +124,78 @@ def serve_stream(fwd, stream, *, warmup: int = 2, metrics=None, bucket=None):
     return latencies, events, wall
 
 
+class PendingResult:
+    """In-flight inference: dispatched to the device, not yet waited on.
+
+    Holds the un-blocked device buffers of one :meth:`ServingEngine.infer`
+    call.  ``result()`` blocks (once), records metrics per chunk, and
+    returns the host logits.  Recorded latency is dispatch-to-REALIZATION
+    (an upper bound on dispatch-to-ready: the host has no device-side
+    completion timestamp) — realize promptly, or the caller's idle time
+    lands in the percentiles.  Wall time for KGPS is overlap-safe in any
+    realization order (see ``ServingEngine._record_wall_window``).
+    """
+
+    def __init__(self, engine, chunks, *, record: bool = True):
+        self._engine = engine
+        self._chunks = chunks            # [(device_out, n_valid, bucket, t0)]
+        self._record = record
+        self._out = None
+
+    @property
+    def ready(self) -> bool:
+        """True when every dispatched buffer is done (non-blocking where
+        the jax version exposes readiness; conservatively False else)."""
+        try:
+            return all(c[0].is_ready() for c in self._chunks)
+        except AttributeError:
+            return False
+
+    def result(self) -> np.ndarray:
+        if self._out is None:
+            outs = []
+            t_first, t_last, events = None, None, 0
+            for out, n_valid, bucket, t0 in self._chunks:
+                jax.block_until_ready(out)
+                t1 = time.perf_counter()
+                if self._record:
+                    self._engine.metrics.record_batch(t1 - t0, n_valid, bucket)
+                t_first = t0 if t_first is None else t_first
+                t_last, events = t1, events + n_valid
+                outs.append(np.asarray(out)[:n_valid])
+            if self._record and t_first is not None:
+                # ONE wall window for the whole dispatch, merged into the
+                # engine's busy-time union: overlapped chunks AND
+                # overlapped concurrent dispatches — realized in ANY
+                # order — must not double-count elapsed time (KGPS is
+                # events/wall, not events/sum-of-latencies)
+                self._engine._record_wall_window(t_first, t_last, events)
+            self._out = np.concatenate(outs, axis=0)
+            self._chunks = ()            # free device buffers
+        return self._out
+
+
+class PendingPlan:
+    """A dispatched :class:`~repro.serving.batcher.BatchPlan` awaiting
+    realization: ``result()`` blocks and reassembles per-request logits."""
+
+    def __init__(self, pending: PendingResult, requests):
+        self._pending = pending
+        self._requests = requests
+
+    @property
+    def ready(self) -> bool:
+        return self._pending.ready
+
+    def result(self) -> dict:
+        logits = self._pending.result()
+        out: dict[int, list] = {}
+        for rid, start, stop in self._requests:
+            out.setdefault(rid, []).append(logits[start:stop])
+        return {rid: np.concatenate(parts, axis=0)
+                for rid, parts in out.items()}
+
+
 class ServingEngine:
     """Bucketed, sharded, metered inference over one forward path."""
 
@@ -107,15 +203,20 @@ class ServingEngine:
                  interpret: bool | None = None, mesh="auto",
                  bucket_sizes=None, max_batch: int = 1024,
                  metrics: ServingMetrics | None = None):
-        if forward not in FORWARD_FNS:
-            raise ValueError(f"unknown forward path {forward!r}")
-        self.params = params
+        self.spec = forward_paths.get(forward)   # raises listing choices
+        if not self.spec.supports_dtype(cfg.compute_dtype):
+            raise ValueError(
+                f"path {forward!r} supports compute dtypes "
+                f"{self.spec.compute_dtypes}, not {cfg.compute_dtype!r}")
+        # the spec's params transform (e.g. int8 quantization) runs ONCE,
+        # here — every dispatch then serves the transformed weights
+        self.params = self.spec.prepare_params(params)
         self.cfg = cfg
         self.forward = forward
         # compiled Pallas needs a real TPU; fall back to interpret elsewhere
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
-        self.interpret = bool(interpret) and forward in PALLAS_PATHS
+        self.interpret = bool(interpret) and self.spec.pallas
         if mesh == "auto":
             mesh = make_host_mesh() if len(jax.devices()) > 1 else None
         self.mesh = mesh
@@ -130,6 +231,9 @@ class ServingEngine:
                 per_dev, self._per_sample_bytes())
             bucket_sizes = [b * self.n_shards for b in ladder]
         self.bucket_sizes = sorted(int(b) for b in bucket_sizes)
+        # merged busy-time intervals (perf_counter): KGPS wall is the
+        # UNION of dispatch windows, never a double-counted sum
+        self._wall_windows: list[tuple[float, float]] = []
         if self.mesh is not None:
             bad = [b for b in self.bucket_sizes if b % self.n_shards]
             if bad:
@@ -141,12 +245,7 @@ class ServingEngine:
     # -- compile-cache management ------------------------------------------
 
     def _per_sample_bytes(self) -> int:
-        c = self.cfg
-        return full_forward_bytes_per_sample(
-            c.n_objects, c.n_features,
-            autotune.mlp_widths(self.params["fr"]),
-            autotune.mlp_widths(self.params["fo"]),
-            autotune.mlp_widths(self.params["phi"]))
+        return self.spec.bucket_bytes(self.cfg, self.params)
 
     def _cache_key(self, bucket: int) -> tuple:
         c = self.cfg
@@ -163,8 +262,8 @@ class ServingEngine:
         return fn
 
     def _build(self):
-        fn = FORWARD_FNS[self.forward]
-        if self.forward in PALLAS_PATHS:
+        fn = self.spec.forward
+        if self.spec.pallas:
             fn = functools.partial(fn, interpret=self.interpret)
         cfg = self.cfg
 
@@ -180,6 +279,42 @@ class ServingEngine:
     @property
     def cache_size(self) -> int:
         return len(self._cache)
+
+    def _record_wall_window(self, t0: float, t1: float, events: int) -> None:
+        """Record ``events`` over the part of [t0, t1] not already counted.
+
+        Maintains the union of busy windows, so overlapping dispatches
+        realized in any order contribute exactly their NEW coverage to
+        the KGPS wall — never a double-counted sum, never dropped time.
+        The merged list stays tiny: contiguous serving collapses to one
+        interval.
+        """
+        segs = [(t0, t1)]
+        for s, e in self._wall_windows:        # subtract existing coverage
+            nxt = []
+            for a, b in segs:
+                if e <= a or s >= b:
+                    nxt.append((a, b))
+                    continue
+                if a < s:
+                    nxt.append((a, s))
+                if e < b:
+                    nxt.append((e, b))
+            segs = nxt
+        self._wall_windows.append((t0, t1))
+        self._wall_windows.sort()
+        merged = []
+        for s, e in self._wall_windows:        # compact
+            if merged and s <= merged[-1][1]:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], e))
+            else:
+                merged.append((s, e))
+        # bound the list: out-of-order realization is bounded by the
+        # outstanding PendingResults, so ancient windows can be dropped —
+        # a pathologically stale realization then at worst over-counts a
+        # little wall, it never corrupts unboundedly
+        self._wall_windows = merged[-_MAX_WALL_WINDOWS:]
+        self.metrics.record_wall(sum(b - a for a, b in segs), events)
 
     def bucket_for(self, n_events: int) -> int:
         """Smallest bucket holding ``n_events`` (largest if none do)."""
@@ -202,37 +337,49 @@ class ServingEngine:
         return np.concatenate(
             [x, np.zeros((bucket - n, *x.shape[1:]), x.dtype)], axis=0)
 
-    def infer(self, x, *, record: bool = True) -> np.ndarray:
+    def infer(self, x, *, record: bool = True, sync: bool = True):
         """Classify ``x`` (n, N_o, P): pad to bucket, dispatch, slice back.
 
-        Requests larger than the top bucket are chunked through it.
+        Requests larger than the top bucket are chunked through it; chunk
+        k+1's pad + dispatch overlaps chunk k's compute, with at most
+        :data:`MAX_INFLIGHT_CHUNKS` dispatches outstanding so an
+        arbitrarily large request keeps bounded device memory (the old
+        block-per-chunk loop pinned exactly one buffer; this pins a small
+        pipeline's worth).
+
+        ``sync=True`` (default) blocks and returns the logits array;
+        ``sync=False`` returns a :class:`PendingResult` immediately after
+        dispatch, letting the caller (e.g. a batcher loop) overlap the
+        next flush with this one's in-flight compute.  Metrics are
+        recorded when the result is realized, never on dispatch.
         """
         x = np.asarray(x)
         top = self.bucket_sizes[-1]
-        outs = []
+        chunks = []
         for i in range(0, x.shape[0], top):
+            if len(chunks) >= MAX_INFLIGHT_CHUNKS:
+                # throttle: wait for the oldest in-flight chunk before
+                # enqueueing more (its latency is still stamped at
+                # realization, where the wait is then a no-op)
+                jax.block_until_ready(chunks[-MAX_INFLIGHT_CHUNKS][0])
             chunk = x[i:i + top]
             bucket = self.bucket_for(chunk.shape[0])
             fn = self.compiled_for(bucket)
             t0 = time.perf_counter()
-            out = fn(jnp.asarray(self._pad(chunk, bucket)))
-            jax.block_until_ready(out)
-            t1 = time.perf_counter()
-            if record:
-                self.metrics.record_batch(t1 - t0, chunk.shape[0], bucket)
-                self.metrics.record_wall(t1 - t0, chunk.shape[0])
-            outs.append(np.asarray(out)[:chunk.shape[0]])
-        return np.concatenate(outs, axis=0)
+            out = fn(jnp.asarray(self._pad(chunk, bucket)))   # async dispatch
+            chunks.append((out, chunk.shape[0], bucket, t0))
+        pending = PendingResult(self, chunks, record=record)
+        return pending.result() if sync else pending
 
-    def run_plan(self, plan) -> dict:
+    def run_plan(self, plan, *, sync: bool = True):
         """Execute one :class:`~repro.serving.batcher.BatchPlan`; returns
-        ``{rid: (n_i, n_targets) logits}`` reassembled per request."""
-        logits = self.infer(plan.x)
-        out: dict[int, list] = {}
-        for rid, start, stop in plan.requests:
-            out.setdefault(rid, []).append(logits[start:stop])
-        return {rid: np.concatenate(parts, axis=0)
-                for rid, parts in out.items()}
+        ``{rid: (n_i, n_targets) logits}`` reassembled per request.
+
+        ``sync=False`` returns a :class:`PendingPlan` right after
+        dispatch; realize it with ``.result()`` once the next plans are
+        in flight."""
+        pending = PendingPlan(self.infer(plan.x, sync=False), plan.requests)
+        return pending.result() if sync else pending
 
     def run_stream(self, stream, *, warmup: int = 2) -> dict:
         """Pump a fixed-size batch stream through the double-buffered feed
@@ -246,6 +393,11 @@ class ServingEngine:
         if len(sizes) != 1:
             raise ValueError(f"stream batches differ in size: {sorted(sizes)}")
         n_valid = sizes.pop()
+        if n_valid > self.bucket_sizes[-1]:
+            raise ValueError(
+                f"stream batch size {n_valid} exceeds the top bucket "
+                f"{self.bucket_sizes[-1]}; build the engine with "
+                f"max_batch >= {n_valid} or chunk through infer()")
         bucket = self.bucket_for(n_valid)
         fwd = self.compiled_for(bucket)
         padded = [self._pad(np.asarray(b), bucket) for b in stream]
@@ -261,9 +413,8 @@ class ServingEngine:
     # -- roofline context ----------------------------------------------------
 
     def roofline(self, buckets=None, *, compute_bytes: int = 2) -> dict:
-        """TPUModel step-time context per bucket for this path's level."""
-        level = codesign.PATH_FUSED_LEVELS.get(self.forward, "none")
-        return codesign.bucket_roofline(
+        """TPUModel step-time context per bucket, at the spec's declared
+        fusion level and weight precision."""
+        return self.spec.roofline_for(
             self.cfg, buckets if buckets is not None else self.bucket_sizes,
-            fused=level, compute_bytes=compute_bytes,
-            chips=max(self.n_shards, 1))
+            compute_bytes=compute_bytes, chips=max(self.n_shards, 1))

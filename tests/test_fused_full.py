@@ -151,16 +151,19 @@ def test_working_set_full_exceeds_edge():
 def test_tpu_model_full_strictly_lower_hbm(n_o):
     cfg = inet.JediNetConfig(n_objects=n_o, n_features=16)
     pt = codesign.TPUDesignPoint(cfg=cfg, batch=1024)
-    none = codesign.TPUModel.evaluate(pt, fused="none")
-    edge = codesign.TPUModel.evaluate(pt, fused="edge")
-    full = codesign.TPUModel.evaluate(pt, fused="full")
+    none = codesign.TPUModel.evaluate(pt, "none")
+    edge = codesign.TPUModel.evaluate(pt, "edge")
+    full = codesign.TPUModel.evaluate(pt, "full")
     assert full["hbm_bytes"] < edge["hbm_bytes"] < none["hbm_bytes"]
-    # legacy bools still map to the same levels
-    assert codesign.TPUModel.evaluate(pt, fused=True)["hbm_bytes"] == \
-        edge["hbm_bytes"]
-    assert codesign.TPUModel.evaluate(pt, fused=False)["hbm_bytes"] == \
-        none["hbm_bytes"]
     assert full["fused_level"] == "full"
+    # the legacy bool levels are gone — False used to coerce silently
+    for legacy in (True, False, "both"):
+        with pytest.raises(ValueError):
+            codesign.TPUModel.evaluate(pt, legacy)
+    # quantized weight precision cuts HBM below the same level's fp bill
+    int8 = codesign.TPUModel.evaluate(pt, "full", weight_bytes=1)
+    assert int8["hbm_bytes"] < full["hbm_bytes"]
+    assert int8["weight_bytes"] == 1 and full["weight_bytes"] == 2
 
 
 def test_explore_uses_full_level_by_default():
