@@ -10,6 +10,19 @@ with zero edits here.  Each path's numerical error against its own
 spec-declared reference fn rides along in the payload so the JSON
 records correctness next to speed.
 
+Whole-network ("full") Pallas paths additionally record their autotuned
+``(block_b, block_s)`` against the UNTILED model's ``block_b`` at the
+modeled batch: the sender-tiled kernel's live set shrinks ~N_o/block_s,
+so the batch tile — and with it weight-traffic amortization — grows by
+the ratio (``block_b_gain`` in the payload is the cross-PR acceptance
+number for the tiling rework).
+
+A large-graph entry (``tracks128``: N_o=128 track-level events,
+``configs/jedi_tracks_128``) proves the tiled kernel serves graphs the
+untiled working-set model REJECTS (even block_b=1 exceeds the VMEM
+budget — ``untiled_rejected`` in the payload); it runs the fp32
+``fused_full`` path as ``fp32_fused_full_large``, interpret-mode on CPU.
+
 Pallas paths run in interpret mode off-TPU: their wall-clock is a CPU
 emulation (flagged ``"interpret": true`` in the JSON) — the HBM model is
 the cross-PR comparable number there, exactly as in bench_fusion.py.
@@ -19,10 +32,13 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import row, select_paths, time_fn
 from repro.core import codesign, paths
 from repro.core import interaction_net as inet
+from repro.data.jets import make_tracks
+from repro.kernels.fused_jedinet import autotune as fj_autotune
 
 # filled by run(); benchmarks/run.py serializes it to BENCH_fused.json
 JSON_PAYLOAD: dict = {}
@@ -36,6 +52,54 @@ def _measure(spec, params, cfg, x, interpret: bool):
         call = jax.jit(lambda p, x_: spec.forward(p, cfg, x_))
     iters = 3 if interpret else 10
     return time_fn(call, params, x, warmup=1, iters=iters)
+
+
+def _entry(spec, us, batch, interpret, hbm, model_batch, err):
+    """One payload entry, shared by the per-config loop and tracks128 so
+    the schema the regression gate parses cannot diverge between them."""
+    return {
+        "wall_us": us,
+        "batch": batch,
+        "interpret": interpret,
+        "fused_level": spec.fused_level,
+        "quantized": spec.quantized,
+        "modeled_hbm_bytes": hbm,
+        "modeled_hbm_batch": model_batch,
+        "max_abs_err_vs_ref": err,
+        "ref_tolerance": spec.tolerance,
+    }
+
+
+def _widths(params):
+    return (fj_autotune.mlp_widths(params["fr"]),
+            fj_autotune.mlp_widths(params["fo"]),
+            fj_autotune.mlp_widths(params["phi"]))
+
+
+def _tiling(cfg, params, batch: int) -> dict:
+    """Autotuned tiled (block_b, block_s) vs the untiled model's block_b
+    at the same batch — the sender-tiling acceptance numbers.  BOTH
+    sides run under the same weight-reserved budget, so block_b_gain
+    isolates the tiling effect (not the reservation policy)."""
+    fr_w, fo_w, phi_w = _widths(params)
+    reserved = fj_autotune.weight_vmem_bytes(params, cfg.compute_dtype)
+    budget = fj_autotune.effective_budget(
+        fj_autotune.VMEM_BUDGET_BYTES, reserved)
+    untiled_per = fj_autotune.full_forward_bytes_per_sample(
+        cfg.n_objects, cfg.n_features, fr_w, fo_w, phi_w)
+    untiled_fits = fj_autotune.fits_vmem(untiled_per, budget)
+    untiled_bb = fj_autotune.pick_block_b(batch, untiled_per, budget)
+    bb, bs = fj_autotune.pick_block_b_s(
+        batch, cfg.n_objects, cfg.n_features, fr_w, fo_w, phi_w,
+        reserved_bytes=reserved)
+    return {
+        "autotuned_block_b": bb,
+        "autotuned_block_s": bs,
+        "untiled_block_b": untiled_bb,
+        "untiled_per_sample_bytes": untiled_per,
+        "untiled_rejected": not untiled_fits,
+        "block_b_gain": bb / max(untiled_bb, 1),
+    }
 
 
 def run():
@@ -67,23 +131,60 @@ def run():
                    if spec.pallas and not on_tpu
                    else spec.forward(pparams, cfg, xq))
             err = float(jnp.max(jnp.abs(fwd - spec.ref(pparams, cfg, xq))))
-            entry["paths"][name] = {
-                "wall_us": us,
-                "batch": b,
-                "interpret": interpret,
-                "fused_level": spec.fused_level,
-                "quantized": spec.quantized,
-                "modeled_hbm_bytes": hbm,
-                "modeled_hbm_batch": batch,
-                "max_abs_err_vs_ref": err,
-                "ref_tolerance": spec.tolerance,
-            }
+            entry["paths"][name] = _entry(spec, us, b, interpret, hbm,
+                                          batch, err)
+            derived = (f"level={spec.fused_level} "
+                       f"modeled_hbm={hbm / 1e6:.2f}MB err={err:.1e}")
+            if spec.pallas and spec.fused_level == "full":
+                tiling = _tiling(cfg, pparams, batch)
+                entry["paths"][name].update(tiling)
+                derived += (f" block_b={tiling['autotuned_block_b']}"
+                            f"(x{tiling['block_b_gain']:.1f} vs untiled "
+                            f"{tiling['untiled_block_b']})"
+                            f" block_s={tiling['autotuned_block_s']}")
             rows.append(row(
                 f"fused_paths_{cname}_{name}", us,
-                f"level={spec.fused_level} modeled_hbm={hbm / 1e6:.2f}MB "
-                f"err={err:.1e}"
-                f"{' (interpret)' if interpret else ''}"))
+                derived + (" (interpret)" if interpret else "")))
         payload["configs"][cname] = entry
+
+    # --- large-graph regime: N_o=128 track-level events ------------------
+    # The untiled whole-network kernel cannot hold even ONE sample's
+    # (N_o, N_o, H1) grid in the VMEM budget here; the sender-tiled
+    # kernel runs it (interpret-mode emulation off-TPU, tiny batch).
+    from repro.configs.jedi_tracks_128 import MODEL as large_cfg
+    lparams = inet.init(jax.random.PRNGKey(0), large_cfg, scale="lecun")
+    lbatch = 512 if on_tpu else 4       # measured batch (interpret is slow)
+    model_batch = 512                   # modeled numbers stay backend-
+    spec = paths.get("fused_full")      # independent, like 30p/50p above
+    tiling = _tiling(large_cfg, lparams, model_batch)
+    assert tiling["untiled_rejected"], (
+        "tracks128 must exceed the untiled VMEM model "
+        f"({tiling['untiled_per_sample_bytes']} B/sample) — "
+        "it exists to prove the tiled kernel opens this regime")
+    # standardized track-level events (the workload this config models);
+    # raw unit-normal inputs would inflate the 127-way sender sums past
+    # trained-logit scale and the abs-err column would measure noise
+    x = jnp.asarray(make_tracks(np.random.RandomState(1), lbatch,
+                                large_cfg.n_objects,
+                                large_cfg.n_features)[0])
+    us = _measure(spec, lparams, large_cfg, x, not on_tpu)
+    xq = x[:2]
+    fwd = spec.forward(lparams, large_cfg, xq, interpret=not on_tpu)
+    err = float(jnp.max(jnp.abs(fwd - spec.ref(lparams, large_cfg, xq))))
+    hbm = codesign.TPUModel.hbm_bytes(large_cfg, model_batch, 2, "full")
+    payload["configs"]["tracks128"] = {
+        "n_objects": large_cfg.n_objects,
+        "paths": {"fp32_fused_full_large": {
+            **_entry(spec, us, lbatch, not on_tpu, hbm, model_batch, err),
+            **tiling,
+        }},
+    }
+    rows.append(row(
+        "fp32_fused_full_large", us,
+        f"N_o={large_cfg.n_objects} untiled_rejected="
+        f"{tiling['untiled_rejected']} block_b={tiling['autotuned_block_b']} "
+        f"block_s={tiling['autotuned_block_s']} err={err:.1e}"
+        + ("" if on_tpu else " (interpret)")))
 
     JSON_PAYLOAD.clear()
     JSON_PAYLOAD.update(payload)

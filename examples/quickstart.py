@@ -59,6 +59,33 @@ def main():
         print(f"{name:>16}: {(time.perf_counter()-t0)/10*1e3:.2f} ms / "
               "256-jet batch (CPU)")
 
+    # 4. the large-graph regime: N_o=128 track-level events fit ONLY
+    # through the sender-tiled kernel — the untiled working-set model
+    # rejects even a single sample's (N_o, N_o, H1) grid.
+    from repro.configs.jedi_tracks_128 import MODEL as tcfg
+    from repro.data.jets import make_tracks
+    from repro.kernels.fused_jedinet import autotune as fj_autotune
+    import numpy as np
+    tparams = inet.init(jax.random.PRNGKey(0), tcfg, scale="lecun")
+    widths = tuple(fj_autotune.mlp_widths(tparams[k])
+                   for k in ("fr", "fo", "phi"))
+    untiled = fj_autotune.full_forward_bytes_per_sample(
+        tcfg.n_objects, tcfg.n_features, *widths)
+    # same reservation the forward call's internal autotune applies, so
+    # the printed tile is the tile that actually runs
+    bb, bs = fj_autotune.pick_block_b_s(
+        4, tcfg.n_objects, tcfg.n_features, *widths,
+        reserved_bytes=fj_autotune.weight_vmem_bytes(tparams,
+                                                     tcfg.compute_dtype))
+    xt = jnp.asarray(make_tracks(np.random.RandomState(0), 4)[0])
+    spec = paths.get("fused_full")
+    logits = spec.forward(tparams, tcfg, xt, interpret=True)
+    err = float(jnp.max(jnp.abs(logits - spec.ref(tparams, tcfg, xt))))
+    print(f"\ntracks128 (N_o={tcfg.n_objects}): untiled model needs "
+          f"{untiled / 2**20:.2f} MiB/sample (> budget, rejected); "
+          f"tiled kernel runs block_b={bb} block_s={bs}, "
+          f"err vs ref {err:.1e}")
+
 
 if __name__ == "__main__":
     main()

@@ -28,6 +28,7 @@ ARCH_MODULES = {
     # the paper's own models
     "jedinet-30p": "repro.configs.jedi_30p",
     "jedinet-50p": "repro.configs.jedi_50p",
+    "jedinet-tracks-128": "repro.configs.jedi_tracks_128",
 }
 
 ASSIGNED_ARCHS = [a for a in ARCH_MODULES if not a.startswith("jedinet")]

@@ -241,6 +241,41 @@ def bucket_roofline(cfg: JediNetConfig, buckets, *, level: str = "full",
     return out
 
 
+def path_bucket_policy(spec, cfg: JediNetConfig, params, *,
+                       max_batch: int = 1024, compute_bytes: int = 2,
+                       chips: int = 1, roofline: bool = True) -> dict:
+    """One forward path's resolved serving policy + roofline, in one dict.
+
+    The co-design view of the per-path bucket policy: the path's OWN
+    VMEM model (``spec.bucket_bytes``), its weight-residency reservation
+    (``spec.reserved_vmem_bytes`` — int8 weights reserve ~4x less, so
+    quantized paths earn deeper ladders), the ladder those produce, and
+    the TPUModel roofline per rung at the path's fusion level and weight
+    precision.  ``params`` are RAW; the spec's transform hook (e.g. int8
+    quantization) is applied here so the reservation reflects the
+    serving dtype.  ``paths.describe(cfg=..., params=...)`` — and so
+    ``trigger_serve --list-paths`` — renders its output; the engine
+    resolves the same policy through ``spec.bucket_ladder`` at
+    construction.  ``roofline=False`` skips the per-rung TPUModel
+    evaluation for consumers that only render the ladder.
+    """
+    pparams = spec.prepare_params(params)
+    ladder = spec.bucket_ladder(cfg, pparams, max_batch)
+    out = {
+        "path": spec.name,
+        "compute_dtypes": tuple(spec.compute_dtypes),
+        "weight_bytes": spec.weight_bytes,
+        "per_sample_bytes": spec.bucket_bytes(cfg, pparams),
+        "reserved_vmem_bytes": spec.reserved_vmem_bytes(cfg, pparams),
+        "bucket_ladder": ladder,
+    }
+    if roofline:
+        out["roofline"] = spec.roofline_for(cfg, ladder,
+                                            compute_bytes=compute_bytes,
+                                            chips=chips)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Design-space exploration (Sec. 4.4).
 # ---------------------------------------------------------------------------

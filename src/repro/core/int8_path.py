@@ -6,13 +6,19 @@ The TPU analogue is a quantized MXU path — weights stored in int8 with
 symmetric per-tensor scales, activations and accumulation kept in fp32.
 At trigger-tier batch sizes the step is weight-traffic bound (see
 EXPERIMENTS.md §Roofline), so 4 bytes -> 1 byte of weight HBM is the
-eventual latency lever, exactly like the paper trading DSP precision
-for initiation interval.  TODAY the win is storage/checkpoint size and
-the proven registry extension point: this wrapper dequantizes at the
-HBM boundary (the fused kernel still reads fp32 weights), so the spec
-does NOT claim reduced weight traffic — moving the dequant inside the
-kernel (int8 loads into VMEM) is the ROADMAP follow-up, at which point
-``weight_bytes=1`` on the spec flips the roofline everywhere at once.
+latency lever, exactly like the paper trading DSP precision for
+initiation interval.
+
+Since the sender-tiled kernel rework the dequantization happens
+IN-KERNEL: the quantized layers' int8 tensors travel to VMEM at
+1 byte/element (``fused_forward_full`` detects the ``"w_scale"`` keys
+and threads the scales in), the MXU multiplies the raw integer values
+upcast to the compute dtype, and each per-tensor scale folds into the
+fp32 ACCUMULATOR — so the spec honestly declares ``weight_bytes=1`` and
+the roofline bills 1-byte weight traffic everywhere at once.  The
+quantized weights also reserve ~4x less VMEM residency, which the
+per-path bucket policy (``PathSpec.bucket_ladder``) converts into a
+deeper serving ladder than the fp32 twin earns.
 
 This module is also the registry's proof of extension: the path is
 registered ONLY here via :func:`~repro.core.paths.register_path`, yet
@@ -26,13 +32,17 @@ Quantization scheme
 -------------------
 Per weight tensor W: ``scale = max|W| / 127``; ``W_q = round(W / scale)``
 clipped to [-127, 127], stored as int8 next to the fp32 scale.  Biases
-stay fp32.  The forward dequantizes (``W_q * scale``) and runs the
-whole-network fused kernel with fp32 accumulation, so the numerics are
-bit-identical to an int8-weight MXU pass with an fp32 accumulator.  The
-reference fn sees the SAME quantized params (spec contract: ``ref`` and
-``forward`` both receive the transformed params), so the declared
-tolerance measures kernel fidelity, not quantization loss — the
-quantization loss itself is characterized in the numerics tests.
+stay fp32.  The kernel computes ``(h @ W_q) * scale`` with fp32
+accumulation — numerically the dequantized matmul (integer values up to
++-127 are exact in fp32), so the numerics are bit-identical to an
+int8-weight MXU pass with an fp32 accumulator.  The reference fn sees
+the SAME quantized params (spec contract: ``ref`` and ``forward`` both
+receive the transformed params), so the declared tolerance measures
+kernel fidelity, not quantization loss — the quantization loss itself
+is characterized in the numerics tests.  :func:`dequantize_params`
+survives as the HBM-boundary dequant (the PR-4 wrapper's scheme): it
+feeds the XLA reference and the in-kernel-vs-boundary equivalence
+tests.
 """
 
 from __future__ import annotations
@@ -69,7 +79,13 @@ def quantize_params_int8(params):
 
 
 def dequantize_params(qparams):
-    """fp32 view of int8-quantized params (``w = w_q * w_scale``)."""
+    """fp32 view of int8-quantized params (``w = w_q * w_scale``).
+
+    The PR-4 HBM-boundary dequant scheme: running the fused kernel on
+    THIS output reads fp32 weights from HBM (4 B/element) — kept as the
+    numerical twin the in-kernel dequant is tested against, and as the
+    bridge for consumers that need fp32 weights (XLA reference paths).
+    """
     def dqlayer(layer):
         out = {"w": layer["w"].astype(jnp.float32) * layer["w_scale"]}
         if "b" in layer:
@@ -95,20 +111,20 @@ def _ref_int8(qparams, cfg, x):
     transform_params=quantize_params_int8,
     tolerance=INT8_TOLERANCE,
     quantized=True,
-    # weight_bytes deliberately UNSET: today the dequant happens at the
-    # HBM boundary (the kernel consumes fp32 weights), so the roofline
-    # must bill fp32 weight traffic.  Set weight_bytes=1 the day the
-    # kernel loads int8 into VMEM and dequantizes on-chip (ROADMAP) —
-    # that one-line spec change flips every consumer's model at once.
-    description="int8-weight whole-network kernel, fp32 accumulation",
+    # The kernel loads int8 into VMEM and dequantizes on-chip (scale
+    # folded after the fp32 accumulate), so the roofline honestly bills
+    # 1 byte/weight of HBM traffic — this one field flips the model for
+    # every consumer (engine roofline, codesign, benchmarks, CI gate).
+    weight_bytes=1,
+    description="int8-weight whole-network kernel, in-VMEM dequant",
 )
 def forward_int8_fused_full(qparams, cfg, x, *, interpret: bool = False):
-    """Whole-network fused forward with int8-quantized weights.
+    """Whole-network fused forward with int8 weights dequantized in-kernel.
 
     ``qparams`` is the output of :func:`quantize_params_int8` (the
     spec's params-transform hook applies it automatically wherever the
-    path is resolved through the registry).
+    path is resolved through the registry).  The int8 tensors are passed
+    to the kernel VERBATIM — no fp32 materialization outside VMEM.
     """
     from repro.kernels.fused_jedinet import ops as fused_ops
-    return fused_ops.fused_forward_full(dequantize_params(qparams), cfg, x,
-                                        interpret=interpret)
+    return fused_ops.fused_forward_full(qparams, cfg, x, interpret=interpret)

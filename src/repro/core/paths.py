@@ -89,18 +89,44 @@ class PathSpec:
     def bucket_bytes(self, cfg, params) -> int:
         """Per-sample VMEM working set driving the serving bucket ladder.
 
-        Defaults to the whole-network kernel's estimate — the most
-        conservative of the fused working sets, so ladder rungs derived
-        from it are safe for every path.
+        Defaults to the sender-TILED whole-network kernel's estimate at
+        the smallest sender tile — the deepest honest ladder, since the
+        kernel-side 2D autotuner can always fall back to that tile to
+        fit any rung the ladder derives from it.
         """
         if self.per_sample_bytes is not None:
             return int(self.per_sample_bytes(cfg, params))
+        from repro.kernels.autotune import _SUBLANE
         from repro.kernels.fused_jedinet.autotune import (
-            full_forward_bytes_per_sample, mlp_widths)
-        return full_forward_bytes_per_sample(
+            full_forward_tiled_bytes_per_sample, mlp_widths)
+        return full_forward_tiled_bytes_per_sample(
             cfg.n_objects, cfg.n_features,
             mlp_widths(params["fr"]), mlp_widths(params["fo"]),
-            mlp_widths(params["phi"]))
+            mlp_widths(params["phi"]),
+            block_s=min(_SUBLANE, cfg.n_objects))
+
+    def reserved_vmem_bytes(self, cfg, params) -> int:
+        """VMEM the path's weights occupy before any batch row arrives,
+        at their ACTUAL serving dtype — int8-quantized params reserve
+        ~4x less than fp32, which is how quantized paths earn deeper
+        bucket ladders (ROADMAP "per-path quantization-aware bucket
+        policy").  ``params`` must already be transformed
+        (:meth:`prepare_params`)."""
+        from repro.kernels.autotune import weight_vmem_bytes
+        return weight_vmem_bytes(params, cfg.compute_dtype)
+
+    def bucket_ladder(self, cfg, params, max_batch: int,
+                      budget_bytes: int | None = None) -> list[int]:
+        """The serving pad-to-bucket ladder this path earns: rungs from
+        :func:`repro.kernels.autotune.bucket_ladder` under the path's
+        OWN per-sample working set and weight-residency reservation —
+        the per-path policy every consumer (engine, CLI ``--list-paths``,
+        benchmarks) resolves through one call."""
+        from repro.kernels import autotune
+        kw = {} if budget_bytes is None else {"budget_bytes": budget_bytes}
+        return autotune.bucket_ladder(
+            max_batch, self.bucket_bytes(cfg, params),
+            reserved_bytes=self.reserved_vmem_bytes(cfg, params), **kw)
 
     def roofline_for(self, cfg, buckets, *, compute_bytes: int = 2,
                      chips: int = 1) -> dict:
@@ -201,17 +227,41 @@ def available(**tags: Any) -> list[str]:
     return [s.name for s in specs(**tags)]
 
 
-def describe(names: Sequence[str] | None = None) -> str:
-    """Human-readable registry table (the CLI's ``--list-paths``)."""
+def describe(names: Sequence[str] | None = None, *, cfg=None, params=None,
+             max_batch: int = 1024) -> str:
+    """Human-readable registry table (the CLI's ``--list-paths``).
+
+    The static columns (fusion level, kernel kind, compute dtypes,
+    roofline ``wB`` = weight bytes, tolerance) always print.  Given a
+    ``cfg`` AND raw ``params``, each path's RESOLVED bucket policy is
+    appended — per-sample VMEM bytes, weight-residency reservation and
+    the bucket ladder it earns for ``max_batch`` — so an operator can
+    see directly why a quantized path (smaller reservation) gets a
+    deeper ladder than its fp32 twin.
+    """
     rows = [get(n) for n in (names if names is not None else available())]
     lines = [f"{'path':<16} {'level':<5} {'kernel':<7} {'dtypes':<18} "
-             f"{'tol':<7} description"]
+             f"{'wB':<3} {'tol':<7} description"]
     for s in rows:
         kind = "pallas" if s.pallas else "xla"
         if s.quantized:
             kind += "+q"
+        wb = "-" if s.weight_bytes is None else str(s.weight_bytes)
         lines.append(
             f"{s.name:<16} {s.fused_level:<5} {kind:<7} "
-            f"{','.join(s.compute_dtypes):<18} {s.tolerance:<7.0e} "
+            f"{','.join(s.compute_dtypes):<18} {wb:<3} {s.tolerance:<7.0e} "
             f"{s.description}")
+    if cfg is not None and params is not None:
+        from repro.core.codesign import path_bucket_policy
+        lines.append("")
+        lines.append(f"bucket policy @ n_objects={cfg.n_objects} "
+                     f"max_batch={max_batch} (per-path VMEM model):")
+        lines.append(f"{'path':<16} {'B/sample':>9} {'reservedB':>10} ladder")
+        for s in rows:
+            pol = path_bucket_policy(s, cfg, params, max_batch=max_batch,
+                                     roofline=False)
+            lines.append(
+                f"{s.name:<16} {pol['per_sample_bytes']:>9} "
+                f"{pol['reserved_vmem_bytes']:>10} "
+                f"{','.join(str(b) for b in pol['bucket_ladder'])}")
     return "\n".join(lines)

@@ -63,3 +63,66 @@ def jet_batches(seed: int, batch: int, n_particles: int,
     while True:
         x, y = make_jets(rng, batch, n_particles, n_features, noise)
         yield {"x": x, "y": y}
+
+
+# --- large-graph regime: track-level events ---------------------------------
+
+#: Tracks per event in the large-graph configs — the regime real-time
+#: graph building on FPGAs targets (Neu et al., arXiv:2307.07289:
+#: O(100) tracks/event at 40 MHz), where the UNTILED whole-network
+#: kernel's (N_o, N_o, H1) grid no longer fits VMEM at any batch tile
+#: and only the sender-tiled kernel applies.
+TRACKS_N = 128
+
+
+def make_tracks(rng: np.random.RandomState, n: int,
+                n_tracks: int = TRACKS_N, n_features: int = 16,
+                noise: float = 0.25):
+    """Synthetic TRACK-level events: (x (n, n_tracks, P) float32, y (n,)).
+
+    Where :func:`make_jets` plants calorimeter-style (pT, eta, phi)
+    clusters, this generator mimics an inner-tracker readout: each class
+    plants a characteristic number of displaced vertices, and every
+    track carries 5 helix-flavoured raw features — (log pT, eta, phi,
+    d0, z0) — with d0/z0 drawn around its vertex, then embedded into
+    ``n_features`` via the same fixed random map + nonlinearity trick
+    so the tensor layout matches the jet datasets exactly.  Same label
+    space (:data:`N_CLASSES`) so the full JEDI-net stack runs unchanged
+    at N_o = ``n_tracks``.
+    """
+    y = rng.randint(0, N_CLASSES, size=n).astype(np.int32)
+
+    # class-dependent generative parameters
+    n_vertices = 1 + (y % 3)                      # prompt + displaced
+    displacement = 0.05 + 0.20 * (y % 2)          # d0/z0 scale per class
+    softness = 0.5 + 0.25 * (y // 2)              # pT falloff
+
+    x5 = np.zeros((n, n_tracks, 5), np.float32)
+    for i in range(n):
+        k = n_vertices[i]
+        vtx = rng.normal(0, displacement[i], size=(k, 2))   # (d0, z0) centers
+        dirs = rng.normal(0, 1.0, size=(k, 2))              # (eta, phi) axes
+        assign = rng.randint(0, k, size=n_tracks)
+        pt = rng.exponential(softness[i], n_tracks).astype(np.float32)
+        pt = np.sort(pt)[::-1]
+        x5[i, :, 0] = np.log1p(pt)
+        x5[i, :, 1:3] = dirs[assign] + rng.normal(0, 0.2, (n_tracks, 2))
+        x5[i, :, 3:5] = vtx[assign] + rng.normal(
+            0, 0.02, (n_tracks, 2))
+    emb_rng = np.random.RandomState(4321)
+    w1 = emb_rng.normal(0, 1.0, (5, n_features)).astype(np.float32)
+    w2 = emb_rng.normal(0, 0.5, (5, n_features)).astype(np.float32)
+    x = np.tanh(x5 @ w1) + x5 @ w2
+    x += rng.normal(0, noise, x.shape).astype(np.float32)
+    x = (x - x.mean(axis=(0, 1), keepdims=True)) / (
+        x.std(axis=(0, 1), keepdims=True) + 1e-6)
+    return x.astype(np.float32), y
+
+
+def track_batches(seed: int, batch: int, n_tracks: int = TRACKS_N,
+                  n_features: int = 16, noise: float = 0.25):
+    """Infinite iterator of {"x", "y"} track-level batches."""
+    rng = np.random.RandomState(seed)
+    while True:
+        x, y = make_tracks(rng, batch, n_tracks, n_features, noise)
+        yield {"x": x, "y": y}

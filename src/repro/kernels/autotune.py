@@ -20,9 +20,45 @@ VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 _SUBLANE = 8
 
 
+def effective_budget(budget_bytes: int, reserved_bytes: int) -> int:
+    """Budget left for batch rows after ``reserved_bytes`` of VMEM
+    residency (a path's weight blocks, :func:`weight_vmem_bytes`) is
+    spoken for, floored at 1/8 of the budget so a pathologically heavy
+    reservation degrades the tile instead of zeroing it.  THE one
+    definition of the reservation policy — the serving ladder
+    (:func:`bucket_ladder`) and the kernel-side 2D tile picker
+    (``fused_jedinet.autotune.pick_block_b_s``) must stay in lockstep,
+    or the engine pads to buckets the kernel tiles differently for."""
+    return max(budget_bytes - max(int(reserved_bytes), 0), budget_bytes // 8)
+
+
 def mlp_widths(params) -> list[int]:
     """Output widths of each layer of a ``{"layers": [{"w", "b"}, ...]}`` MLP."""
     return [int(lp["w"].shape[-1]) for lp in params["layers"]]
+
+
+def weight_vmem_bytes(params, compute_dtype=None) -> int:
+    """VMEM residency of a params pytree at the dtypes the kernels SHIP:
+    integer (quantized) weights verbatim — 1 B/element where their fp32
+    twins bill 4, which is how quantized paths reserve less of the
+    budget and earn deeper bucket ladders (see :func:`bucket_ladder`'s
+    ``reserved_bytes``) — fp weights at ``compute_dtype`` (the wrappers
+    cast them down before the kernel; ``None`` bills the stored dtype),
+    and biases/scales at their stored fp32."""
+    import jax
+    cbytes = None if compute_dtype is None \
+        else jnp.dtype(compute_dtype).itemsize
+
+    def leaf_bytes(path, x):
+        item = jnp.dtype(x.dtype).itemsize
+        is_w = any(getattr(k, "key", None) == "w" for k in path)
+        if is_w and cbytes is not None \
+                and not jnp.issubdtype(x.dtype, jnp.integer):
+            item = cbytes
+        return x.size * item
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    return int(sum(leaf_bytes(path, x) for path, x in flat))
 
 
 def pick_block_b(batch: int, per_sample_bytes: int,
@@ -52,7 +88,8 @@ def pick_block_b(batch: int, per_sample_bytes: int,
 
 
 def bucket_ladder(max_batch: int, per_sample_bytes: int,
-                  budget_bytes: int = VMEM_BUDGET_BYTES) -> list[int]:
+                  budget_bytes: int = VMEM_BUDGET_BYTES, *,
+                  reserved_bytes: int = 0) -> list[int]:
     """Serving pad-to-bucket batch sizes derived from the VMEM tile.
 
     Requests are padded UP to the nearest bucket so every bucket compiles
@@ -69,8 +106,16 @@ def bucket_ladder(max_batch: int, per_sample_bytes: int,
 
     The last bucket always covers ``max_batch`` (larger requests are
     chunked by the caller).
+
+    ``reserved_bytes`` is VMEM spoken for before any batch row arrives —
+    the path's weight blocks (:func:`weight_vmem_bytes`).  It shrinks
+    the effective budget, so a path whose weights are int8 (1 B/element
+    resident) keeps a larger tile — and therefore a deeper ladder — than
+    the same network in fp32: the quantization-aware per-path bucket
+    policy (``PathSpec.bucket_ladder`` threads it through).
     """
     max_batch = max(int(max_batch), 1)
+    budget_bytes = effective_budget(budget_bytes, reserved_bytes)
     tile = pick_block_b(max_batch, per_sample_bytes, budget_bytes)
     ladder: list[int] = []
     b = _SUBLANE

@@ -1,26 +1,33 @@
 """VMEM working-set estimators for the fused JEDI-net kernels.
 
-Both fused kernels (edge-only and whole-network) are gridded over the
-batch axis only: one program instance owns ``block_b`` jets and every
-intermediate for those jets lives in VMEM.  Choosing ``block_b`` is
-therefore a pure working-set computation — the per-sample VMEM bytes of
-the LARGEST live intermediate chain — fed to the shared tile picker in
-``repro.kernels.autotune``.
+Both fused kernels are gridded over the batch axis (the whole-network
+kernel additionally over sender tiles): one program instance owns
+``block_b`` jets and every intermediate for those jets lives in VMEM.
+Choosing the tile sizes is therefore a pure working-set computation —
+the per-sample VMEM bytes of the LARGEST live intermediate chain — fed
+to the shared tile picker in ``repro.kernels.autotune``.
 
-This replaces the ad-hoc ``_pick_block_b`` that used to live in
-``ops.py``.  Two behavioural fixes over that version:
+Three estimators:
 
-* The edge-only estimate ignored everything but the f_R grid; the full
-  kernel also keeps C, the f_O activations and the phi_O activations
-  live, so the working set is modelled per kernel from the actual layer
-  widths.
-* The old picker rounded ``block_b`` down to a *divisor of the batch*
-  so the grid tiled exactly.  A prime batch (B=1009) therefore degraded
-  to ``block_b=1`` — a 1009-step grid of tiny tiles.  The shared picker
-  keeps the VMEM-optimal tile and PADS the batch to the next tile
-  multiple (callers slice the output back); worst-case padding overhead
-  is (block_b-1)/B — sub-percent for any realistic trigger batch —
-  versus up to a block_b-times larger grid.
+* :func:`edge_block_bytes_per_sample` — edge-only kernel (f_R grid
+  dominates; x and Ebar tiles ride along).
+* :func:`full_forward_bytes_per_sample` — UNTILED whole-network kernel:
+  the full ``(N_o, N_o, H1)`` receiver x sender grid is live at once.
+  Kept as the rejection model for large graphs — past N_o ~ 100 even
+  ``block_b = 1`` exceeds the budget (:func:`fits_vmem`), which is the
+  regime the sender-tiled kernel exists for.
+* :func:`full_forward_tiled_bytes_per_sample` — sender-tiled kernel:
+  only a ``(N_o, block_s, H1)`` slab of the grid plus the fp32 Ebar
+  accumulator is live, so the per-sample set shrinks ~``N_o/block_s``
+  and ``block_b`` grows by the ratio.
+
+:func:`pick_block_b_s` searches the 2D ``(block_b, block_s)`` space:
+smaller sender tiles buy larger batch tiles (weight HBM traffic
+amortizes over more jets per step), so the picker maximizes ``block_b``
+and breaks ties toward the larger ``block_s`` (fewer sender steps, less
+remainder padding).  For batches small enough that the whole batch fits
+at every ``block_s``, the tie-break degenerates to ``block_s = N_o`` —
+the untiled kernel, with zero sender-loop overhead.
 """
 
 from __future__ import annotations
@@ -29,10 +36,12 @@ from __future__ import annotations
 from repro.kernels.autotune import (  # noqa: F401
     VMEM_BUDGET_BYTES,
     _SUBLANE,
+    effective_budget,
     mlp_widths,
     pad_batch,
     padded_batch,
     pick_block_b,
+    weight_vmem_bytes,
 )
 
 
@@ -56,17 +65,128 @@ def full_forward_bytes_per_sample(n_objects: int, n_features: int,
                                   fo_widths: list[int],
                                   phi_widths: list[int],
                                   acc_bytes: int = 4) -> int:
-    """Per-jet VMEM working set of the whole-network kernel.
+    """Per-jet VMEM working set of the UNTILED whole-network kernel.
 
-    The f_R grid still dominates, but C = [x ‖ Ebar], the f_O activations
-    and the (per-tile negligible) phi_O activations are live in the same
-    program, so they count against the same budget.
+    The full (N_o, N_o, H1) f_R grid is live at once; C = [x ‖ Ebar],
+    the f_O activations and the (per-tile negligible) phi_O activations
+    are live in the same program, so they count against the same budget.
+    This is the model that REJECTS large graphs (see :func:`fits_vmem`);
+    the tiled estimate below is what the kernel actually runs under.
+    """
+    return full_forward_tiled_bytes_per_sample(
+        n_objects, n_features, fr_widths, fo_widths, phi_widths,
+        block_s=n_objects, acc_bytes=acc_bytes)
+
+
+def full_forward_tiled_bytes_per_sample(n_objects: int, n_features: int,
+                                        fr_widths: list[int],
+                                        fo_widths: list[int],
+                                        phi_widths: list[int],
+                                        block_s: int,
+                                        acc_bytes: int = 4) -> int:
+    """Per-jet VMEM working set of the sender-tiled whole-network kernel.
+
+    Live at any instant: one (N_o, block_s, H1) slab of the f_R grid,
+    the bilinear-split projections u_r (N_o, H1) / u_s (block_s, H1)
+    feeding it, the fp32 Ebar accumulator scratch, the receiver x tile
+    plus this step's sender-chunk slice, and — only after the last
+    sender tile — C and the f_O / phi_O activations.  The tail
+    intermediates share the budget because they coexist with the
+    accumulator and x.  ``block_s = N_o`` reproduces the untiled
+    estimate exactly.
     """
     n_o = n_objects
-    grid = n_o * n_o * max(fr_widths + [_SUBLANE])
+    block_s = max(1, min(int(block_s), n_o))
+    h1 = fr_widths[0]
+    slab = n_o * block_s * max(fr_widths + [_SUBLANE])
+    u_r = n_o * h1
+    u_s = block_s * h1
     x_tile = n_o * n_features
-    ebar = n_o * fr_widths[-1]
+    xs_tile = block_s * n_features
+    ebar_acc = n_o * fr_widths[-1]
     c_tile = n_o * (n_features + fr_widths[-1])
     fo_acts = n_o * max(fo_widths + [_SUBLANE])
     phi_acts = max(phi_widths + [_SUBLANE])
-    return (grid + x_tile + ebar + c_tile + fo_acts + phi_acts) * acc_bytes
+    return (slab + u_r + u_s + x_tile + xs_tile + ebar_acc + c_tile
+            + fo_acts + phi_acts) * acc_bytes
+
+
+def fits_vmem(per_sample_bytes: int,
+              budget_bytes: int = VMEM_BUDGET_BYTES) -> bool:
+    """Can even ONE sample's working set hold the budget?  ``False``
+    means the kernel under that model OOMs VMEM at any batch tile —
+    the untiled whole-network kernel past N_o ~ 100."""
+    return per_sample_bytes <= budget_bytes
+
+
+def sender_tile_candidates(n_objects: int) -> list[int]:
+    """Sender-axis tile sizes worth searching: sublane-aligned doublings
+    (8, 16, 32, ...) strictly below N_o, plus N_o itself (the untiled
+    degenerate).  Ascending."""
+    cands = []
+    b = _SUBLANE
+    while b < n_objects:
+        cands.append(b)
+        b *= 2
+    cands.append(n_objects)
+    return cands
+
+
+def pick_block_b_s(batch: int, n_objects: int, n_features: int,
+                   fr_widths: list[int], fo_widths: list[int],
+                   phi_widths: list[int],
+                   budget_bytes: int = VMEM_BUDGET_BYTES,
+                   reserved_bytes: int = 0) -> tuple[int, int]:
+    """Jointly pick ``(block_b, block_s)`` for the tiled kernel.
+
+    For each candidate sender tile the per-sample live set is modeled
+    (:func:`full_forward_tiled_bytes_per_sample`) and the shared picker
+    chooses the batch tile; the winner maximizes ``block_b`` (weight
+    traffic amortizes over the largest batch tile), ties broken toward
+    the LARGER ``block_s`` (fewer sender grid steps, less remainder
+    padding — and for small batches this degenerates to
+    ``block_s = N_o``, the untiled kernel).
+
+    ``reserved_bytes`` (e.g. the weight blocks' VMEM residency,
+    :func:`~repro.kernels.autotune.weight_vmem_bytes`) is subtracted
+    from the budget — the quantization-aware knob: int8 weights reserve
+    4x less, leaving more VMEM for batch rows.
+    """
+    budget = effective_budget(budget_bytes, reserved_bytes)
+    best = fallback = None
+    for bs in sender_tile_candidates(n_objects):
+        per = full_forward_tiled_bytes_per_sample(
+            n_objects, n_features, fr_widths, fo_widths, phi_widths, bs)
+        bb = pick_block_b(batch, per, budget)
+        # pick_block_b floors block_b at 1 even when ONE sample busts the
+        # budget, so a non-fitting candidate can tie with fitting ones at
+        # small batches (and the larger-block_s tie-break would then pick
+        # the very configuration fits_vmem rejects) — skip it.
+        if per > budget:
+            if fallback is None:          # smallest live set, if nothing fits
+                fallback = (bb, bs)
+            continue
+        if best is None or (bb, bs) > (best[0], best[1]):
+            best = (bb, bs)
+    return best if best is not None else fallback
+
+
+def pick_block_s(block_b: int, n_objects: int, n_features: int,
+                 fr_widths: list[int], fo_widths: list[int],
+                 phi_widths: list[int],
+                 budget_bytes: int = VMEM_BUDGET_BYTES,
+                 reserved_bytes: int = 0) -> int:
+    """Largest sender tile that fits the budget ALONGSIDE a pinned batch
+    tile — the one-knob-pinned complement of :func:`pick_block_b_s`.
+    Falls back to the smallest candidate when none fit (the caller's
+    ``block_b`` is then oversubscribed either way; the smallest live set
+    is the least-bad tile to run it with)."""
+    budget = effective_budget(budget_bytes, reserved_bytes)
+    cands = sender_tile_candidates(n_objects)
+    best = cands[0]
+    for bs in cands:                       # per-sample grows with bs, so
+        per = full_forward_tiled_bytes_per_sample(   # the last fit wins
+            n_objects, n_features, fr_widths, fo_widths, phi_widths, bs)
+        if max(int(block_b), 1) * per <= budget:
+            best = bs
+    return best

@@ -13,22 +13,59 @@ the only HBM traffic is the weights + x in and the (batch, n_targets)
 logits out, the TPU analogue of the paper's fully-fused layer-wise
 architecture where every stage hand-off is an on-chip stream.
 
+Two-level tiling (sender axis)
+------------------------------
+The f_R interaction grid is the VMEM hog: materializing the full
+receiver x sender grid costs ``O(block_b * N_o^2 * H1)`` fp32, which at
+N_o=50 already forces tiny batch tiles and past N_o~100 cannot hold even
+ONE sample — exactly the regime real-time track-graph building targets
+(Neu et al., 2307.07289; JEDI-linear, 2508.15468).  The kernel therefore
+grids over (batch tiles, sender tiles): each program step computes the
+``(block_b, N_o, block_s, H1)`` slab of the grid for one chunk of
+``block_s`` senders and folds its sender-sum into an fp32 VMEM scratch
+accumulator ``acc[block_b, N_o, D_e]`` that persists across the sender
+steps.  Only after the LAST sender tile does the trailing network
+(f_O, node-sum, phi_O) run and write logits.  The live set shrinks from
+``O(block_b * N_o^2 * H1)`` to ``O(block_b * N_o * block_s * H1)``, so
+``block_b`` grows by ~``N_o / block_s`` — weight traffic amortizes over
+much larger batch tiles — and N_o=128 graphs fit where the untiled
+working-set model rejects even ``block_b = 1``.
+
+Each sender chunk is SLICED out of the batch tile's resident x block in
+VMEM (``block_s`` need not divide N_o: the remainder tile's slice start
+clamps and the mask drops the re-covered columns), so x crosses HBM
+once per batch tile — the docstring's traffic claim stays exact.  The
+diagonal (self-edge) mask and the clamp mask are applied PER TILE
+before the accumulate, so the summand set stays identical to the
+strength-reduced reference — no subtractive cancellation, fp32
+agreement < 1e-4.  ``block_s = N_o`` degenerates to the old untiled
+kernel (one sender step, mask = 1 - eye).
+
+In-kernel int8 weights
+----------------------
+Weight refs may arrive as int8 (symmetric per-tensor quantization,
+``core/int8_path.py``): the kernel then loads 1-byte weights from HBM
+into VMEM, runs the matmul on the raw integer values upcast to the
+compute dtype, and folds the fp32 ``scale`` into the ACCUMULATED fp32
+result — numerically the dequantized matmul, billed at 1 B/weight HBM
+traffic (``PathSpec.weight_bytes = 1``).  Scales ride in one small
+``(1, n_weights)`` fp32 input; biases stay fp32 and are added after the
+scale fold, exactly as in the fp path.
+
 Precision co-design (the paper tunes FPGA word lengths; we tune the MXU
 input dtype): every matmul casts its operands to ``compute_dtype`` and
 accumulates in fp32 via ``preferred_element_type``; biases, activations
-and both reductions (sender-sum, node-sum) stay fp32.  With
-``compute_dtype="bfloat16"`` the MXU runs at its native rate while the
-additive aggregation — the numerically delicate part (up to N_o-1 = 49
-summands) — keeps full precision.
+and both reductions (sender-sum, node-sum) stay fp32.
 
 The two beyond-paper transformations of the edge kernel (bilinear
-first-layer split; dense N_o x N_o grid + diagonal correction instead of
-a gather) are inherited unchanged — see kernel.py's docstring and
-EXPERIMENTS.md §Perf.
+first-layer split; dense grid + diagonal/bounds masking instead of a
+gather) are inherited — see kernel.py's docstring and EXPERIMENTS.md
+§Perf.
 
-Grid: one program per batch tile, weights broadcast to every step.
-``block_b`` comes from the working-set autotuner (autotune.py), which
-models the FULL live set (grid + C + f_O acts), not just the f_R grid.
+Grid: ``(batch tiles, sender tiles)``, sender innermost; weights and
+scales broadcast to every step.  ``(block_b, block_s)`` come from the 2D
+working-set autotuner (autotune.pick_block_b_s), which models the TILED
+live set.
 """
 
 from __future__ import annotations
@@ -38,112 +75,233 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.fused_jedinet.kernel import _mm
 from repro.nn.core import ACTIVATIONS
 
 
-def _full_forward_kernel(x_ref, *rest_refs, activation: str, n_fr: int,
-                         n_fo: int, n_phi: int):
-    """rest_refs = [w1r, w1s, b1, (fr w/b)*, (fo w/b)*, (phi w/b)*, out_ref].
+def _is_int(w) -> bool:
+    return jnp.issubdtype(w.dtype, jnp.integer)
 
-    Weight refs arrive pre-cast to the compute dtype; biases are fp32.
+
+def _mmq(h, w, scale, compute_dtype):
+    """Matmul with fp32 accumulation; int weights fold ``scale`` AFTER.
+
+    ``h`` casts to the weight's compute representation (int8 weights
+    upcast to ``compute_dtype`` — their integer values are exact in
+    fp32/bf16 up to +-127, so the MXU sees the same operands an int8
+    datapath would); the per-tensor dequant scale multiplies the fp32
+    ACCUMULATOR, not the weight, so the weight block in VMEM stays
+    1 byte/element.
     """
-    out_ref = rest_refs[-1]
-    wref = list(rest_refs[:-1])
+    wv = w[...]
+    if _is_int(wv):
+        wv = wv.astype(compute_dtype)
+    out = jax.lax.dot_general(
+        h.astype(wv.dtype), wv,
+        (((h.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if scale is not None:
+        out = out * scale
+    return out
+
+
+def _tiled_forward_kernel(x_ref, *rest_refs, activation: str,
+                          n_fr: int, n_fo: int, n_phi: int, n_o: int,
+                          block_s: int, quantized: bool, compute_dtype):
+    """rest_refs = [scales?] + [w1r, w1s, b1, (fr w/b)*, (fo w/b)*,
+    (phi w/b)*] + [out_ref, acc_ref].
+
+    ``x_ref``   — (block_b, N_o, P): the full receiver view, resident
+                  across sender steps (its index map ignores j), so x
+                  crosses HBM ONCE per batch tile.  Each sender step
+                  slices its ``block_s`` chunk out of this block in
+                  VMEM — no second x operand, no sender-padded copy.
+                  The slice start clamps at ``N_o - block_s`` for the
+                  remainder tile; the mask excludes the senders the
+                  clamp re-covers (``send >= j*block_s``).
+    ``acc_ref`` — (block_b, N_o, D_e) fp32 VMEM scratch: the Ebar
+                  accumulator, carried across the sender steps of one
+                  batch tile.
+    Weight refs arrive pre-cast to the compute dtype (or int8 when
+    ``quantized``); biases are fp32.
+    """
+    out_ref, acc_ref = rest_refs[-2], rest_refs[-1]
+    wref = list(rest_refs[:-2])
+    if quantized:
+        scales_ref, wref = wref[0], wref[1:]
+
+        def s(k):
+            return scales_ref[0, k]
+    else:
+        def s(k):
+            return None
     act = ACTIVATIONS[activation]
 
     w1r, w1s, b1 = wref[0], wref[1], wref[2]
     fr_rest = wref[3:3 + 2 * (n_fr - 1)]
     fo_w = wref[3 + 2 * (n_fr - 1):3 + 2 * (n_fr - 1) + 2 * n_fo]
     phi_w = wref[3 + 2 * (n_fr - 1) + 2 * n_fo:]
+    # scale index of each weight tensor, in ref order (biases carry none)
+    k_fr = list(range(n_fr + 1))                       # w1r, w1s, w2..
+    k_fo = [n_fr + 1 + i for i in range(n_fo)]
+    k_phi = [n_fr + 1 + n_fo + i for i in range(n_phi)]
+
+    j = pl.program_id(1)
+    n_sj = pl.num_programs(1)
 
     x = x_ref[...]                                      # (bb, N_o, P) cdt
-    _, n_o, _ = x.shape
+    # this step's sender chunk, sliced from the resident receiver block;
+    # the start clamps for the remainder tile (block_s ∤ N_o) and the
+    # mask below drops the rows the clamp re-reads from the previous tile
+    start = jnp.minimum(j * block_s, n_o - block_s)
+    xs = jax.lax.dynamic_slice_in_dim(x, start, block_s, axis=1)
 
-    # --- f_R layer 1, bilinear split: per-node projections (N_o rows)
-    u_r = _mm(x, w1r[...])                              # (bb, N_o, H1) fp32
-    u_s = _mm(x, w1s[...])
+    # --- f_R layer 1, bilinear split: receiver projection over ALL N_o
+    # rows (cheap: N_o*P*H1, recomputed per sender step so no second
+    # scratch), sender projection over THIS tile only.
+    u_r = _mmq(x, w1r, s(k_fr[0]), compute_dtype)       # (bb, N_o, H1) fp32
+    u_s = _mmq(xs, w1s, s(k_fr[1]), compute_dtype)      # (bb, bs, H1) fp32
 
-    # --- dense receiver x sender grid (regular access, no gather)
+    # --- dense receiver x sender-tile slab (regular access, no gather)
     h = u_r[:, :, None, :] + u_s[:, None, :, :] + b1[...]
     if n_fr > 1:                                        # f_R output is linear
-        h = act(h)                                      # (bb, N_o, N_o, H1)
+        h = act(h)                                      # (bb, N_o, bs, H1)
 
-    # --- remaining f_R layers on the grid
+    # --- remaining f_R layers on the slab
     for li in range(n_fr - 1):
-        h = _mm(h, fr_rest[2 * li][...]) + fr_rest[2 * li + 1][...]
+        h = _mmq(h, fr_rest[2 * li], s(k_fr[2 + li]), compute_dtype) \
+            + fr_rest[2 * li + 1][...]
         if li < n_fr - 2:
             h = act(h)
 
-    # --- aggregate: zero the self-edge diagonal, then sum over senders.
-    # Masking BEFORE the sum (instead of subtracting the diagonal after)
-    # keeps the summand set identical to the strength-reduced reference —
-    # no subtractive cancellation, so fp32 agreement stays < 1e-4.
-    mask = 1.0 - jnp.eye(n_o, dtype=h.dtype)
-    ebar = jnp.sum(h * mask[None, :, :, None], axis=2)  # (bb, N_o, D_e)
+    # --- masked accumulate: zero the self-edge diagonal cell AND any
+    # sender column the clamped remainder slice re-covers from the
+    # previous tile, BEFORE the sum — every sender contributes exactly
+    # once and the summand set stays identical to the reference (no
+    # subtractive cancellation).
+    recv = jax.lax.broadcasted_iota(jnp.int32, (n_o, block_s), 0)
+    send = jax.lax.broadcasted_iota(jnp.int32, (n_o, block_s), 1) + start
+    mask = ((recv != send) & (send >= j * block_s)).astype(h.dtype)
+    contrib = jnp.sum(h * mask[None, :, :, None], axis=2)   # (bb, N_o, D_e)
 
-    # --- C = [x ‖ Ebar]; f_O per node, all still in VMEM
-    h = jnp.concatenate([x.astype(jnp.float32), ebar], axis=-1)
-    for li in range(n_fo):
-        h = _mm(h, fo_w[2 * li][...]) + fo_w[2 * li + 1][...]
-        if li < n_fo - 1:
-            h = act(h)                                  # (bb, N_o, D_o)
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # --- node-sum + phi_O -> logits
-    h = jnp.sum(h, axis=1)                              # (bb, D_o) fp32
-    for li in range(n_phi):
-        h = _mm(h, phi_w[2 * li][...]) + phi_w[2 * li + 1][...]
-        if li < n_phi - 1:
-            h = act(h)
+    acc_ref[...] += contrib
 
-    out_ref[...] = h.astype(out_ref.dtype)              # (bb, n_targets)
+    # --- after the LAST sender tile: C = [x ‖ Ebar], f_O, node-sum,
+    # phi_O — all still in VMEM, once per batch tile.
+    @pl.when(j == n_sj - 1)
+    def _tail():
+        h = jnp.concatenate([x.astype(jnp.float32), acc_ref[...]], axis=-1)
+        for li in range(n_fo):
+            h_ = _mmq(h, fo_w[2 * li], s(k_fo[li]), compute_dtype) \
+                + fo_w[2 * li + 1][...]
+            h_ = act(h_) if li < n_fo - 1 else h_       # (bb, N_o, D_o)
+            h = h_
+        h = jnp.sum(h, axis=1)                          # (bb, D_o) fp32
+        for li in range(n_phi):
+            h_ = _mmq(h, phi_w[2 * li], s(k_phi[li]), compute_dtype) \
+                + phi_w[2 * li + 1][...]
+            h_ = act(h_) if li < n_phi - 1 else h_
+            h = h_
+        out_ref[...] = h.astype(out_ref.dtype)          # (bb, n_targets)
 
 
 def flatten_mlp(params, dtype):
-    """[w0, b0, w1, b1, ...] with weights cast to ``dtype``, biases fp32."""
+    """[w0, b0, w1, b1, ...] with weights cast to ``dtype``, biases fp32.
+
+    int8-quantized layers (``{"w": int8, "w_scale": fp32, "b": fp32}``)
+    keep their int8 weights verbatim — the kernel dequantizes in VMEM.
+    """
     flat = []
     for lp in params["layers"]:
-        flat.append(lp["w"].astype(dtype))
+        w = lp["w"]
+        flat.append(w if _is_int(w) else w.astype(dtype))
         flat.append(lp["b"].astype(jnp.float32))
     return flat
 
 
+def mlp_scales(params) -> list:
+    """Per-layer dequant scales of a quantized MLP (fp32 scalars)."""
+    return [lp["w_scale"] for lp in params["layers"]]
+
+
 def fused_forward_full_kernel_call(x, fr_arrays, fo_arrays, phi_arrays, *,
                                    activation: str, n_targets: int,
-                                   block_b: int, interpret: bool = False):
+                                   block_b: int, block_s: int | None = None,
+                                   scales=None, interpret: bool = False):
     """x: (B, N_o, P) compute-dtype -> logits (B, n_targets) fp32.
 
     ``B % block_b == 0`` (callers pad via autotune.pad_batch).
     ``fr_arrays = [w1r, w1s, b1, w2, b2, ...]`` from split_first_layer.
+    ``block_s`` tiles the sender axis (default N_o = untiled).
+    ``scales`` — fp32 vector of per-weight-tensor dequant scales, in
+    weight order [w1r, w1s, w2.., fo.., phi..], required iff any weight
+    array is an integer dtype (in-kernel int8 dequant).
     """
     bsz, n_o, p = x.shape
-    assert bsz % block_b == 0, (bsz, block_b)
+    block_s = n_o if block_s is None else min(int(block_s), n_o)
     n_fr = 1 + (len(fr_arrays) - 3) // 2
     n_fo = len(fo_arrays) // 2
     n_phi = len(phi_arrays) // 2
     weights = [*fr_arrays, *fo_arrays, *phi_arrays]
-    grid = (bsz // block_b,)
+    quantized = any(_is_int(w) for w in weights)
+    d_e = fr_arrays[-2].shape[-1] if n_fr > 1 else fr_arrays[0].shape[-1]
+    compute_dtype = x.dtype
 
-    def xmap(i):
-        return (i, 0, 0)
+    if bsz % block_b != 0:
+        from repro.kernels.fused_jedinet import autotune as fj_autotune
+        fr_w = [int(w.shape[-1]) for w in fr_arrays[0:1] + fr_arrays[3::2]]
+        fo_w = [int(w.shape[-1]) for w in fo_arrays[0::2]]
+        phi_w = [int(w.shape[-1]) for w in phi_arrays[0::2]]
+        modeled = fj_autotune.full_forward_tiled_bytes_per_sample(
+            n_o, p, fr_w, fo_w, phi_w, block_s)
+        raise ValueError(
+            f"batch {bsz} is not a multiple of the batch tile: autotuned "
+            f"(block_b={block_b}, block_s={block_s}) at modeled {modeled} "
+            f"VMEM bytes/sample — pad the batch with autotune.pad_batch(x, "
+            f"{block_b}) (kernel wrappers do this automatically)")
+    if quantized:
+        n_w = len(weights) // 2 + 1                  # +1: w1 split in two
+        if scales is None:
+            raise ValueError(
+                "int8 weight arrays need their dequant scales: pass "
+                "scales=[s_w1r, s_w1s, s_w2, ...] (one per weight tensor)")
+        scales = jnp.asarray(scales, jnp.float32).reshape(1, -1)
+        if scales.shape[1] != n_w:
+            raise ValueError(
+                f"got {scales.shape[1]} scales for {n_w} weight tensors")
+
+    n_sj = -(-n_o // block_s)
+    grid = (bsz // block_b, n_sj)
 
     def wmap(ndim):
-        def m(i):
+        def m(i, j):
             return (0,) * ndim
         return m
 
-    in_specs = [pl.BlockSpec((block_b, n_o, p), xmap)]
+    in_specs = [pl.BlockSpec((block_b, n_o, p), lambda i, j: (i, 0, 0))]
+    operands = [x]
+    if quantized:
+        in_specs.append(pl.BlockSpec(scales.shape, wmap(scales.ndim)))
+        operands.append(scales)
     for w in weights:
         in_specs.append(pl.BlockSpec(w.shape, wmap(w.ndim)))
+    operands.extend(weights)
 
-    kernel = functools.partial(_full_forward_kernel, activation=activation,
-                               n_fr=n_fr, n_fo=n_fo, n_phi=n_phi)
+    kernel = functools.partial(
+        _tiled_forward_kernel, activation=activation, n_fr=n_fr, n_fo=n_fo,
+        n_phi=n_phi, n_o=n_o, block_s=block_s, quantized=quantized,
+        compute_dtype=compute_dtype)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((block_b, n_targets), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((block_b, n_targets), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((bsz, n_targets), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_b, n_o, d_e), jnp.float32)],
         interpret=interpret,
-    )(x, *weights)
+    )(*operands)

@@ -102,15 +102,21 @@ def split_first_layer(params_fr, n_features: int, dtype=jnp.float32):
     """Split f_R's first-layer weight into receiver / sender halves.
 
     Weights are cast to ``dtype`` (the MXU compute dtype); biases stay
-    fp32 so the bias-add happens on the fp32 accumulator.
+    fp32 so the bias-add happens on the fp32 accumulator.  int8-
+    quantized weights keep their integer dtype — the whole-network
+    kernel dequantizes them in VMEM (both halves of a split w1 share
+    w1's per-tensor scale).
     """
+    def wcast(w):
+        return w if jnp.issubdtype(w.dtype, jnp.integer) else w.astype(dtype)
+
     layers = params_fr["layers"]
-    w1 = layers[0]["w"].astype(dtype)                   # (2P, H1)
+    w1 = wcast(layers[0]["w"])                          # (2P, H1)
     b1 = layers[0]["b"].astype(jnp.float32)
     w1r, w1s = w1[:n_features], w1[n_features:]
     rest = []
     for lp in layers[1:]:
-        rest.append(lp["w"].astype(dtype))
+        rest.append(wcast(lp["w"]))
         rest.append(lp["b"].astype(jnp.float32))
     return w1r, w1s, b1, rest
 

@@ -5,7 +5,14 @@ Two entry points:
 * :func:`fused_edge_block` — edge-only fusion (B-construct + f_R + MMM3 in
   VMEM); Ebar returns to XLA for f_O / phi_O.
 * :func:`fused_forward_full` — whole-network fusion (x -> logits in one
-  kernel); the only HBM traffic is weights + x in, logits out.
+  kernel); the only HBM traffic is weights + x in, logits out.  The
+  sender axis is tiled (``block_s``) with an fp32 VMEM accumulator, so
+  the batch tile is chosen from the TILED live set — much larger than
+  the untiled kernel allowed — and graphs past N_o ~ 100 fit at all.
+  int8-quantized params (layers carrying ``"w_scale"``, see
+  ``core/int8_path.py``) are detected here and served with IN-KERNEL
+  dequantization: the kernel reads 1-byte weights from HBM and folds
+  the scales into the fp32 accumulator.
 
 Both pick their batch tile from the working-set autotuner (autotune.py)
 and PAD non-divisible batches to the next tile multiple instead of
@@ -29,10 +36,37 @@ from repro.kernels.fused_jedinet import full_kernel as FK
 from repro.kernels.fused_jedinet import kernel as K
 
 
+def is_quantized_params(params) -> bool:
+    """True when the MLP layers carry int8 weights + dequant scales.
+
+    Quantization is all-or-nothing (``quantize_params_int8`` quantizes
+    every layer): a mixed pytree would send some fp32 weights through
+    the int8 scale plumbing, so it is rejected here at the boundary
+    instead of failing opaquely inside the kernel.
+    """
+    flags = [("w_scale" in lp)
+             for mlp in params.values() for lp in mlp["layers"]]
+    if any(flags) and not all(flags):
+        raise ValueError(
+            "partially quantized params: every MLP layer must carry "
+            "'w_scale' (quantize_params_int8 quantizes all layers); "
+            "mixed fp32/int8 pytrees are not supported")
+    return all(flags) and bool(flags)
+
+
 @partial(jax.jit, static_argnames=("cfg", "interpret", "block_b"))
 def fused_edge_block(params_fr, cfg, x, *, interpret: bool = False,
                      block_b: int | None = None):
     """Ebar = aggregated f_R messages. x: (B, N_o, P) -> (B, N_o, D_e)."""
+    if any("w_scale" in lp for lp in params_fr["layers"]):
+        # the edge kernel has no dequant-scale plumbing: int8 weights
+        # would matmul unscaled (and truncate activations to int8) —
+        # reject at the boundary, like fused_forward_full's
+        # is_quantized_params guard
+        raise ValueError(
+            "fused_edge_block does not support int8-quantized params; "
+            "serve quantized weights through fused_forward_full "
+            "(in-kernel dequant) or dequantize_params first")
     cdt = jnp.dtype(cfg.compute_dtype)
     w1r, w1s, b1, rest = K.split_first_layer(params_fr, cfg.n_features,
                                              dtype=cdt)
@@ -49,27 +83,59 @@ def fused_edge_block(params_fr, cfg, x, *, interpret: bool = False,
     return out[:bsz]
 
 
-@partial(jax.jit, static_argnames=("cfg", "interpret", "block_b"))
+@partial(jax.jit, static_argnames=("cfg", "interpret", "block_b", "block_s"))
 def fused_forward_full(params, cfg, x, *, interpret: bool = False,
-                       block_b: int | None = None):
-    """Whole-network fused forward. x: (B, N_o, P) -> logits (B, n_targets)."""
+                       block_b: int | None = None,
+                       block_s: int | None = None):
+    """Whole-network fused forward. x: (B, N_o, P) -> logits (B, n_targets).
+
+    ``params`` may be raw fp32/bf16 MLPs or int8-quantized ones
+    (``quantize_params_int8``); quantized layers keep their int8 weights
+    all the way into VMEM.  ``(block_b, block_s)`` default to the 2D
+    working-set autotuner; pass either explicitly to pin it (tests).
+    """
     cdt = jnp.dtype(cfg.compute_dtype)
+    quantized = is_quantized_params(params)
     fr = K.split_first_layer(params["fr"], cfg.n_features, dtype=cdt)
     fr_arrays = [fr[0], fr[1], fr[2], *fr[3]]
     fo_arrays = FK.flatten_mlp(params["fo"], cdt)
     phi_arrays = FK.flatten_mlp(params["phi"], cdt)
+    scales = None
+    if quantized:
+        s_fr = FK.mlp_scales(params["fr"])
+        # w1 splits into (w1r, w1s): both halves share w1's tensor scale
+        scales = [s_fr[0], s_fr[0], *s_fr[1:],
+                  *FK.mlp_scales(params["fo"]), *FK.mlp_scales(params["phi"])]
 
-    bb = block_b or autotune.pick_block_b(
-        x.shape[0],
-        autotune.full_forward_bytes_per_sample(
-            cfg.n_objects, cfg.n_features,
-            autotune.mlp_widths(params["fr"]),
-            autotune.mlp_widths(params["fo"]),
-            autotune.mlp_widths(params["phi"])))
+    if block_b is None or block_s is None:
+        fr_w = autotune.mlp_widths(params["fr"])
+        fo_w = autotune.mlp_widths(params["fo"])
+        phi_w = autotune.mlp_widths(params["phi"])
+        reserved = autotune.weight_vmem_bytes(params, cfg.compute_dtype)
+        if block_b is None and block_s is None:
+            block_b, block_s = autotune.pick_block_b_s(
+                x.shape[0], cfg.n_objects, cfg.n_features,
+                fr_w, fo_w, phi_w, reserved_bytes=reserved)
+        elif block_b is None:
+            # block_s pinned: tune the batch tile UNDER it — reusing the
+            # jointly-tuned block_b of a different sender tile could bust
+            # the budget (the pinned pair was never validated together)
+            per = autotune.full_forward_tiled_bytes_per_sample(
+                cfg.n_objects, cfg.n_features, fr_w, fo_w, phi_w,
+                min(int(block_s), cfg.n_objects))
+            block_b = autotune.pick_block_b(
+                x.shape[0], per,
+                autotune.effective_budget(autotune.VMEM_BUDGET_BYTES,
+                                          reserved))
+        else:
+            # block_b pinned: largest sender tile that fits beside it
+            block_s = autotune.pick_block_s(
+                block_b, cfg.n_objects, cfg.n_features,
+                fr_w, fo_w, phi_w, reserved_bytes=reserved)
     bsz = x.shape[0]
-    xp = autotune.pad_batch(x.astype(cdt), bb)
+    xp = autotune.pad_batch(x.astype(cdt), block_b)
     out = FK.fused_forward_full_kernel_call(
         xp, fr_arrays, fo_arrays, phi_arrays,
         activation=cfg.activation, n_targets=cfg.n_targets,
-        block_b=bb, interpret=interpret)
+        block_b=block_b, block_s=block_s, scales=scales, interpret=interpret)
     return out[:bsz]

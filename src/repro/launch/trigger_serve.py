@@ -71,7 +71,16 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     if args.list_paths:
-        print(paths.describe())
+        # Registry table PLUS each path's resolved bucket policy (per-
+        # sample VMEM model, weight residency, the ladder it earns) for
+        # this CLI's config — the operator-facing answer to "why does
+        # the quantized path get deeper buckets than fp32?".
+        cfg = JediNetConfig(n_objects=args.n_objects,
+                            n_features=args.n_features,
+                            compute_dtype=args.compute_dtype)
+        params = init(jax.random.PRNGKey(args.seed), cfg)
+        print(paths.describe(cfg=cfg, params=params,
+                             max_batch=max(args.batch, 1)))
         return
 
     cfg = JediNetConfig(n_objects=args.n_objects, n_features=args.n_features,

@@ -225,10 +225,14 @@ class ServingEngine:
 
         if bucket_sizes is None:
             # ceil so the top rung still covers max_batch after the
-            # per-device ladder is scaled back up by the shard count
+            # per-device ladder is scaled back up by the shard count.
+            # The ladder is the PATH'S policy (spec.bucket_ladder):
+            # per-sample working set AND weight-residency reservation
+            # both come off the spec, so quantized paths (int8 weights
+            # resident at 1 B/element) earn deeper ladders here with no
+            # engine knowledge of why.
             per_dev = -(-max_batch // self.n_shards)
-            ladder = autotune.bucket_ladder(
-                per_dev, self._per_sample_bytes())
+            ladder = self.spec.bucket_ladder(self.cfg, self.params, per_dev)
             bucket_sizes = [b * self.n_shards for b in ladder]
         self.bucket_sizes = sorted(int(b) for b in bucket_sizes)
         # merged busy-time intervals (perf_counter): KGPS wall is the
@@ -243,9 +247,6 @@ class ServingEngine:
         self._cache: dict[tuple, object] = {}
 
     # -- compile-cache management ------------------------------------------
-
-    def _per_sample_bytes(self) -> int:
-        return self.spec.bucket_bytes(self.cfg, self.params)
 
     def _cache_key(self, bucket: int) -> tuple:
         c = self.cfg

@@ -181,20 +181,18 @@ def test_int8_quantization_changes_numerics_but_stays_close(jedi):
     assert err < 0.15 * max(scale, 1.0), (err, scale)
 
 
-def test_int8_roofline_is_honest_about_weight_traffic(jedi):
-    """Today's int8 path dequantizes at the HBM boundary, so its spec
-    must NOT bill 1-byte weights — its roofline equals the fp path's.
-    The weight_bytes capability itself is live in the model layer."""
-    from repro.core import codesign
+def test_int8_roofline_bills_one_byte_weights(jedi):
+    """The kernel loads int8 weights into VMEM and dequantizes on-chip,
+    so the spec declares weight_bytes=1 and the roofline bills 1-byte
+    weight traffic — strictly below the fp path at the same level."""
     cfg, _, _ = jedi
-    int8 = paths.get("int8_fused_full").roofline_for(cfg, [8])[8]
+    spec = paths.get("int8_fused_full")
+    assert spec.weight_bytes == 1
+    int8 = spec.roofline_for(cfg, [8])[8]
     fp = paths.get("fused_full").roofline_for(cfg, [8])[8]
     assert int8["fused_level"] == fp["fused_level"] == "full"
-    assert int8["hbm_bytes"] == fp["hbm_bytes"]
-    # the model capability the in-kernel int8 follow-up will flip on:
-    pt = codesign.TPUDesignPoint(cfg=cfg, batch=8)
-    q = codesign.TPUModel.evaluate(pt, "full", weight_bytes=1)
-    assert q["hbm_bytes"] < fp["hbm_bytes"] and q["weight_bytes"] == 1
+    assert int8["hbm_bytes"] < fp["hbm_bytes"]
+    assert int8["weight_bytes"] == 1 and fp["weight_bytes"] == 2
 
 
 def test_engine_serves_int8_with_zero_wiring(jedi):
