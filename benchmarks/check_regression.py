@@ -29,9 +29,11 @@ one further: entries a fresh run has but the committed baseline lacks
 — e.g. a path newly registered in the forward-path registry — are
 merged INTO the baseline file, speed-normalized to the baseline
 machine's calibration, so the very next run gates them; commit the
-updated BENCH_*.json in the same PR that adds the path.  KGPS drops
-are reported as warnings only (KGPS is the inverse of a wall-clock
-already gated).
+updated BENCH_*.json in the same PR that adds the path.  A baseline
+FILE missing entirely (or unparseable) is a gate FAILURE with the
+bootstrap recipe printed — a silently green gate would hide real
+regressions forever.  KGPS drops are reported as warnings only (KGPS
+is the inverse of a wall-clock already gated).
 
 Intentional baseline refresh: regenerate the committed files with
 
@@ -56,7 +58,16 @@ def _load(path):
     if not os.path.exists(path):
         return None
     with open(path) as f:
-        return json.load(f)
+        try:
+            return json.load(f)
+        except json.JSONDecodeError as e:
+            # a clear verdict beats a raw traceback: the gate treats a
+            # corrupt payload like a missing one, with the remedy named
+            print(f"  WARN: {path} is not valid JSON ({e}); "
+                  "treating as missing — regenerate it with "
+                  "`PYTHONPATH=src python -m benchmarks.run "
+                  "--only fused_paths,serving`")
+            return None
 
 
 def _comparable(fresh, base):
@@ -218,13 +229,22 @@ def main(argv=None) -> int:
             continue
         if base is None:
             if bootstrap:
+                os.makedirs(os.path.dirname(base_path) or ".", exist_ok=True)
                 with open(base_path, "w") as f:
                     json.dump(fresh, f, indent=2, sort_keys=True)
                 print(f"  no committed baseline — bootstrapped {base_path} "
                       "from the fresh run; commit it")
             else:
-                print("  no committed baseline — skipping "
-                      "(first run? --bootstrap seeds one)")
+                # a silently green gate on a missing baseline hides real
+                # regressions forever — fail with the bootstrap recipe
+                print(f"  FAIL: no committed baseline at {base_path}.\n"
+                      "  Bootstrap one from this fresh run with\n"
+                      "      python benchmarks/check_regression.py "
+                      f"--fresh-dir {args.fresh_dir} --bootstrap\n"
+                      "  (or BENCH_BOOTSTRAP=1) and commit the written "
+                      "file.")
+                all_failures.append(
+                    f"{name}: missing baseline (seed it with --bootstrap)")
             continue
         if not _comparable(fresh, base):
             print(f"  backends differ (fresh={fresh.get('backend')} "

@@ -116,6 +116,10 @@ def _ref_int8(qparams, cfg, x):
     # 1 byte/weight of HBM traffic — this one field flips the model for
     # every consumer (engine roofline, codesign, benchmarks, CI gate).
     weight_bytes=1,
+    # Degradation ladder (serving/resilient.py): a failing int8 kernel
+    # demotes to the fp32 fused kernel, which itself bottoms out in the
+    # XLA reference — int8_fused_full -> fused_full -> sr_split.
+    fallback="fused_full",
     description="int8-weight whole-network kernel, in-VMEM dequant",
 )
 def forward_int8_fused_full(qparams, cfg, x, *, interpret: bool = False):

@@ -301,11 +301,11 @@ paths.register(paths.PathSpec(
     description="SR + bilinear first-layer split + dense grid (XLA)"))
 paths.register(paths.PathSpec(
     name="fused", forward=forward_fused, ref=forward_sr,
-    fused_level="edge", pallas=True, tolerance=5e-4,
+    fused_level="edge", pallas=True, tolerance=5e-4, fallback="sr",
     description="Pallas edge kernel: B-construct + f_R + MMM3 in VMEM"))
 paths.register(paths.PathSpec(
     name="fused_full", forward=forward_fused_full, ref=forward_sr,
-    fused_level="full", pallas=True, tolerance=5e-4,
+    fused_level="full", pallas=True, tolerance=5e-4, fallback="sr_split",
     description="whole-network Pallas kernel: x -> logits on-chip"))
 
 

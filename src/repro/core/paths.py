@@ -67,6 +67,7 @@ class PathSpec:
     quantized: bool = False                 # tag: weights are sub-fp32
     weight_bytes: int | None = None         # roofline weight precision override
     per_sample_bytes: Callable | None = None   # (cfg, params) -> VMEM bytes/jet
+    fallback: str | None = None             # degrade-to path (see fallback_chain)
     description: str = ""
 
     def __post_init__(self):
@@ -227,6 +228,46 @@ def available(**tags: Any) -> list[str]:
     return [s.name for s in specs(**tags)]
 
 
+def fallback_chain(name: str) -> list[str]:
+    """The degradation ladder rooted at ``name``: ``[name, fallback,
+    fallback-of-fallback, ...]`` down to a terminal path.
+
+    The serving tier demotes along this chain when a rung fails (compile
+    error, VMEM-fit rejection, non-finite outputs — see
+    :mod:`repro.serving.resilient`), so the chain must be a safe ladder:
+    every link resolves to a registered path, no cycles, and the
+    terminal rung is a **non-Pallas reference path** — plain XLA cannot
+    compile-fail the way a hand-written kernel can, so the bottom of the
+    ladder always serves.  Raises ``ValueError`` on any violation.
+    """
+    chain, seen = [], set()
+    cur: str | None = name
+    while cur is not None:
+        if cur in seen:
+            raise ValueError(
+                f"fallback chain of {name!r} cycles at {cur!r}: "
+                f"{' -> '.join(chain + [cur])}")
+        spec = get(cur)        # raises listing choices on unknown links
+        chain.append(cur)
+        seen.add(cur)
+        cur = spec.fallback
+    terminal = get(chain[-1])
+    if terminal.pallas:
+        raise ValueError(
+            f"fallback chain of {name!r} terminates in Pallas path "
+            f"{terminal.name!r} ({' -> '.join(chain)}); chains must end "
+            "in a non-Pallas reference path so the degradation ladder "
+            "always has a servable bottom rung")
+    return chain
+
+
+def validate_fallbacks() -> dict[str, list[str]]:
+    """Resolve every registered path's fallback chain; raises on the
+    first broken one (unknown link, cycle, or Pallas terminal).  Returns
+    ``{name: chain}`` — the registry-wide degradation map."""
+    return {name: fallback_chain(name) for name in available()}
+
+
 def describe(names: Sequence[str] | None = None, *, cfg=None, params=None,
              max_batch: int = 1024) -> str:
     """Human-readable registry table (the CLI's ``--list-paths``).
@@ -241,16 +282,21 @@ def describe(names: Sequence[str] | None = None, *, cfg=None, params=None,
     """
     rows = [get(n) for n in (names if names is not None else available())]
     lines = [f"{'path':<16} {'level':<5} {'kernel':<7} {'dtypes':<18} "
-             f"{'wB':<3} {'tol':<7} description"]
+             f"{'wB':<3} {'tol':<7} {'fallback chain':<34} description"]
     for s in rows:
         kind = "pallas" if s.pallas else "xla"
         if s.quantized:
             kind += "+q"
         wb = "-" if s.weight_bytes is None else str(s.weight_bytes)
+        try:
+            chain = fallback_chain(s.name)
+            fb = ">".join(chain[1:]) if len(chain) > 1 else "-"
+        except ValueError as e:          # surface broken chains, don't crash
+            fb = f"!invalid ({e})"
         lines.append(
             f"{s.name:<16} {s.fused_level:<5} {kind:<7} "
             f"{','.join(s.compute_dtypes):<18} {wb:<3} {s.tolerance:<7.0e} "
-            f"{s.description}")
+            f"{fb:<34} {s.description}")
     if cfg is not None and params is not None:
         from repro.core.codesign import path_bucket_policy
         lines.append("")

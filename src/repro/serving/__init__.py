@@ -9,9 +9,16 @@ from repro.serving.engine import (
     PendingPlan,
     PendingResult,
     ServingEngine,
+    WatchdogTimeout,
     serve_stream,
 )
+from repro.serving.faults import Fault, FaultInjector, InjectedFault
 from repro.serving.metrics import ServingMetrics, kgps, percentile
+from repro.serving.resilient import (
+    NonFiniteOutput,
+    ResilientEngine,
+    ResilientPending,
+)
 
 
 def __getattr__(name):
@@ -26,11 +33,18 @@ def __getattr__(name):
 __all__ = [
     "BatchPlan",
     "DeadlineBatcher",
+    "Fault",
+    "FaultInjector",
+    "InjectedFault",
+    "NonFiniteOutput",
     "PALLAS_PATHS",
     "PendingPlan",
     "PendingResult",
+    "ResilientEngine",
+    "ResilientPending",
     "ServingEngine",
     "ServingMetrics",
+    "WatchdogTimeout",
     "kgps",
     "percentile",
     "serve_stream",

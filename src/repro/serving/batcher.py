@@ -37,10 +37,19 @@ class BatchPlan:
     requests: tuple                     # ((rid, start, stop), ...) into x
     oldest_wait_s: float                # age of the oldest request at flush
     reason: str                         # "full" | "deadline" | "forced"
+    #: Absolute per-request deadlines (batcher clock), aligned 1:1 with
+    #: ``requests``; ``None`` where the request declared none.  The
+    #: resilient engine sheds segments already past their deadline
+    #: instead of dispatching them.
+    deadlines: tuple = ()
 
     @property
     def n_valid(self) -> int:
         return int(self.x.shape[0])
+
+    def deadline_for(self, i: int) -> float | None:
+        """Deadline of ``requests[i]`` (None for legacy 5-field plans)."""
+        return self.deadlines[i] if i < len(self.deadlines) else None
 
 
 @dataclasses.dataclass
@@ -48,6 +57,7 @@ class _Pending:
     rid: int
     x: np.ndarray
     t_submit: float
+    t_deadline: float | None = None     # absolute serve-by time, if any
 
 
 class DeadlineBatcher:
@@ -79,17 +89,24 @@ class DeadlineBatcher:
 
     # -- request flow -------------------------------------------------------
 
-    def submit(self, rid: int, x: np.ndarray, *,
-               now: float | None = None) -> list[BatchPlan]:
+    def submit(self, rid: int, x: np.ndarray, *, now: float | None = None,
+               deadline_s: float | None = None) -> list[BatchPlan]:
         """Enqueue one request of ``x.shape[0]`` events.
 
         Returns the batch plans this submission made ready (full-bucket
         flushes); empty list while the batch is still filling.
+
+        ``deadline_s`` is the request's serve-by budget relative to
+        ``now``; it rides through the flushed plan (absolute time, same
+        clock) so the engine can shed it once expired instead of
+        spending accelerator time on an answer nobody is waiting for.
         """
         if x.ndim < 1 or x.shape[0] == 0:
             raise ValueError("request must carry at least one event")
         now = self._clock() if now is None else now
-        self._pending.append(_Pending(rid=rid, x=np.asarray(x), t_submit=now))
+        t_deadline = None if deadline_s is None else now + deadline_s
+        self._pending.append(_Pending(rid=rid, x=np.asarray(x), t_submit=now,
+                                      t_deadline=t_deadline))
         plans = []
         while self.pending_events >= self.bucket_sizes[-1]:
             plans.append(self._cut(self.bucket_sizes[-1], now, "full"))
@@ -127,7 +144,7 @@ class DeadlineBatcher:
         Requests are split across plans when they straddle the cut — each
         (rid, start, stop) segment maps output rows back to its request.
         """
-        parts, segments = [], []
+        parts, segments, deadlines = [], [], []
         taken = 0
         oldest = now - self._pending[0].t_submit
         while self._pending and taken < n_events:
@@ -141,6 +158,7 @@ class DeadlineBatcher:
                 head.x = head.x[room:]
             parts.append(part)
             segments.append((head.rid, taken, taken + part.shape[0]))
+            deadlines.append(head.t_deadline)
             taken += part.shape[0]
         return BatchPlan(
             x=np.concatenate(parts, axis=0),
@@ -148,4 +166,5 @@ class DeadlineBatcher:
             requests=tuple(segments),
             oldest_wait_s=oldest,
             reason=reason,
+            deadlines=tuple(deadlines),
         )

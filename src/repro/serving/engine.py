@@ -38,6 +38,7 @@ servable with no engine edits.
 from __future__ import annotations
 
 import functools
+import threading
 import time
 
 import jax
@@ -62,6 +63,14 @@ MAX_INFLIGHT_CHUNKS = 4
 # outstanding PendingResults, small enough that a long-running engine
 # stays O(1) per dispatch.
 _MAX_WALL_WINDOWS = 64
+
+
+class WatchdogTimeout(RuntimeError):
+    """A dispatched result failed to become ready within the watchdog
+    budget (``PendingResult.result(timeout_s=...)``).  The serve loop
+    must never block forever on a wedged dispatch — the resilience
+    layer catches this, counts it, and re-serves via the fallback
+    chain."""
 
 
 def __getattr__(name):
@@ -151,12 +160,36 @@ class PendingResult:
         except AttributeError:
             return False
 
-    def result(self) -> np.ndarray:
+    @staticmethod
+    def _wait_ready(out, deadline: float | None) -> None:
+        """Block until ``out`` is ready; with a ``deadline`` (absolute
+        ``perf_counter`` time), raise :class:`WatchdogTimeout` past it —
+        a wedged dispatch must park the watchdog, not the whole serve
+        loop.  The timed wait blocks in a daemon thread (the efficient
+        runtime wait, zero poll-quantization overhead on the fast path);
+        on timeout the thread is abandoned with the wedged buffer.
+        Results without a readiness probe (plain host arrays) block
+        directly."""
+        if deadline is None or getattr(out, "is_ready", None) is None:
+            jax.block_until_ready(out)
+            return
+        done = threading.Event()
+        threading.Thread(
+            target=lambda: (jax.block_until_ready(out), done.set()),
+            daemon=True).start()
+        if not done.wait(max(0.0, deadline - time.perf_counter())):
+            raise WatchdogTimeout(
+                "dispatched result not ready within the watchdog "
+                "budget; abandoning the in-flight buffer")
+
+    def result(self, *, timeout_s: float | None = None) -> np.ndarray:
         if self._out is None:
+            deadline = (None if timeout_s is None
+                        else time.perf_counter() + timeout_s)
             outs = []
             t_first, t_last, events = None, None, 0
             for out, n_valid, bucket, t0 in self._chunks:
-                jax.block_until_ready(out)
+                self._wait_ready(out, deadline)
                 t1 = time.perf_counter()
                 if self._record:
                     self._engine.metrics.record_batch(t1 - t0, n_valid, bucket)
@@ -187,8 +220,8 @@ class PendingPlan:
     def ready(self) -> bool:
         return self._pending.ready
 
-    def result(self) -> dict:
-        logits = self._pending.result()
+    def result(self, *, timeout_s: float | None = None) -> dict:
+        logits = self._pending.result(timeout_s=timeout_s)
         out: dict[int, list] = {}
         for rid, start, stop in self._requests:
             out.setdefault(rid, []).append(logits[start:stop])
@@ -202,7 +235,7 @@ class ServingEngine:
     def __init__(self, params, cfg, *, forward: str = "fused_full",
                  interpret: bool | None = None, mesh="auto",
                  bucket_sizes=None, max_batch: int = 1024,
-                 metrics: ServingMetrics | None = None):
+                 metrics: ServingMetrics | None = None, injector=None):
         self.spec = forward_paths.get(forward)   # raises listing choices
         if not self.spec.supports_dtype(cfg.compute_dtype):
             raise ValueError(
@@ -222,6 +255,10 @@ class ServingEngine:
         self.mesh = mesh
         self.n_shards = int(np.prod(mesh.devices.shape)) if mesh else 1
         self.metrics = metrics if metrics is not None else ServingMetrics()
+        # Fault-injection seams (serving/faults.py): None in production.
+        # The injector is consulted at compile, dispatch, input and
+        # output boundaries — see the seam calls below.
+        self.injector = injector
 
         if bucket_sizes is None:
             # ceil so the top rung still covers max_batch after the
@@ -258,6 +295,11 @@ class ServingEngine:
         key = self._cache_key(bucket)
         fn = self._cache.get(key)
         if fn is None:
+            if self.injector is not None:
+                # compile seam: fires only on a cache MISS — a warm
+                # callable never recompiles, so it cannot re-fail here
+                self.injector.check("compile", path=self.forward,
+                                    bucket=bucket)
             fn = self._build()
             self._cache[key] = fn
         return fn
@@ -338,7 +380,8 @@ class ServingEngine:
         return np.concatenate(
             [x, np.zeros((bucket - n, *x.shape[1:]), x.dtype)], axis=0)
 
-    def infer(self, x, *, record: bool = True, sync: bool = True):
+    def infer(self, x, *, record: bool = True, sync: bool = True,
+              timeout_s: float | None = None):
         """Classify ``x`` (n, N_o, P): pad to bucket, dispatch, slice back.
 
         Requests larger than the top bucket are chunked through it; chunk
@@ -353,6 +396,8 @@ class ServingEngine:
         dispatch, letting the caller (e.g. a batcher loop) overlap the
         next flush with this one's in-flight compute.  Metrics are
         recorded when the result is realized, never on dispatch.
+        ``timeout_s`` arms the realization watchdog (sync path only;
+        async callers pass it to ``PendingResult.result``).
         """
         x = np.asarray(x)
         top = self.bucket_sizes[-1]
@@ -364,13 +409,22 @@ class ServingEngine:
                 # realization, where the wait is then a no-op)
                 jax.block_until_ready(chunks[-MAX_INFLIGHT_CHUNKS][0])
             chunk = x[i:i + top]
-            bucket = self.bucket_for(chunk.shape[0])
+            n_valid = chunk.shape[0]
+            bucket = self.bucket_for(n_valid)
+            if self.injector is not None:
+                self.injector.check("dispatch", path=self.forward,
+                                    bucket=bucket)
+                chunk = self.injector.corrupt_input(
+                    chunk, path=self.forward, bucket=bucket)
             fn = self.compiled_for(bucket)
             t0 = time.perf_counter()
             out = fn(jnp.asarray(self._pad(chunk, bucket)))   # async dispatch
-            chunks.append((out, chunk.shape[0], bucket, t0))
+            if self.injector is not None:
+                out = self.injector.wrap_output(out, path=self.forward,
+                                                bucket=bucket)
+            chunks.append((out, n_valid, bucket, t0))
         pending = PendingResult(self, chunks, record=record)
-        return pending.result() if sync else pending
+        return pending.result(timeout_s=timeout_s) if sync else pending
 
     def run_plan(self, plan, *, sync: bool = True):
         """Execute one :class:`~repro.serving.batcher.BatchPlan`; returns

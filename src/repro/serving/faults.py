@@ -1,0 +1,215 @@
+"""Deterministic fault injection at the serving engine's seams.
+
+A Level-1 trigger pipeline is judged by how it behaves when things go
+wrong: the real-time trigger literature (arXiv 2307.07289) treats
+continuous degraded operation as a first-class requirement, and you
+cannot claim "the engine demotes on a compile failure" without a way to
+*cause* a compile failure on demand, on CPU, in a unit test.  This
+module is that way.
+
+A :class:`FaultInjector` is handed to :class:`~repro.serving.engine.
+ServingEngine` (and through it to :class:`~repro.serving.resilient.
+ResilientEngine`).  The engine calls the injector at well-defined seams
+of its dispatch path; an armed :class:`Fault` matching that seam fires
+there.  Everything is deterministic — faults are armed with explicit
+``times`` budgets and matched by (seam, path, bucket), never by random
+draw — so every degraded-mode transition (demote, probe, re-promote,
+shed, watchdog timeout) is reproducible in CI.
+
+Seams
+-----
+``compile``
+    Fires inside ``ServingEngine.compiled_for`` on a cache MISS (a warm
+    cache never recompiles, so neither can it re-fail).  Models a
+    Mosaic/XLA lowering failure on a new bucket shape.
+``dispatch``
+    Fires in ``ServingEngine.infer`` just before the chunk is handed to
+    the compiled callable.  Models a runtime dispatch exception
+    (device OOM, donated-buffer reuse, ...).
+``input_nan``
+    Overwrites the chunk's first event with NaNs before dispatch.
+    Models path-local data corruption (a bad quantization scale, a DMA
+    bit-flip) — scoped to one path, so the fallback rung still serves
+    clean outputs.
+``output_nan``
+    Replaces the dispatched output with NaNs.  Models a kernel
+    numerics bug: outputs come back shaped but non-finite.
+``latency``
+    Sleeps ``delay_s`` at dispatch.  Models a slow rung (preempted
+    core, thermally throttled part) for deadline/backpressure drills.
+``stuck``
+    Wraps the output in a :class:`StuckBuffer` that only becomes ready
+    after ``delay_s``.  Models a hung dispatch — the seam the engine's
+    watchdog (``PendingResult.result(timeout_s=...)``) exists for.
+
+Every firing is appended to :attr:`FaultInjector.log` as
+``(seam, path, bucket)`` so tests can assert exactly which seams fired.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+
+import numpy as np
+
+SEAMS = ("compile", "dispatch", "input_nan", "output_nan", "latency",
+         "stuck")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by the ``compile`` / ``dispatch`` seams when a fault fires.
+
+    Carries the seam so the resilience layer can classify the failure
+    (and tests can assert the transition it caused) without string
+    matching."""
+
+    def __init__(self, seam: str, path=None, bucket=None):
+        self.seam = seam
+        self.path = path
+        self.bucket = bucket
+        super().__init__(
+            f"injected {seam} fault (path={path!r}, bucket={bucket})")
+
+
+@dataclasses.dataclass
+class Fault:
+    """One armed fault: where it fires, how often, how hard.
+
+    ``path`` / ``bucket`` of ``None`` match any path / bucket.  ``times``
+    is the firing budget — after that many firings the fault disarms
+    itself, which is how tests script "fail once, then recover".
+    """
+
+    seam: str
+    path: str | None = None
+    bucket: int | None = None
+    times: float = math.inf
+    delay_s: float = 0.0
+    fired: int = 0
+
+    def __post_init__(self):
+        if self.seam not in SEAMS:
+            raise ValueError(f"unknown seam {self.seam!r}; one of {SEAMS}")
+
+    @property
+    def armed(self) -> bool:
+        return self.fired < self.times
+
+    def matches(self, seam: str, path, bucket) -> bool:
+        return (self.armed and self.seam == seam
+                and (self.path is None or self.path == path)
+                and (self.bucket is None or self.bucket == bucket))
+
+
+class StuckBuffer:
+    """A dispatch result that refuses to become ready until ``ready_at``.
+
+    Duck-types the slice of the jax.Array surface the engine's
+    realization path touches — ``is_ready()`` (polled by the watchdog),
+    ``block_until_ready()`` (the legacy blocking path; sleeps out the
+    remaining stall so non-watchdog callers still terminate), and
+    ``__array__`` / ``shape`` / ``dtype`` for host materialization.
+    """
+
+    def __init__(self, inner, ready_at: float, clock=time.monotonic):
+        self._inner = inner
+        self._ready_at = ready_at
+        self._clock = clock
+
+    def is_ready(self) -> bool:
+        return self._clock() >= self._ready_at
+
+    def block_until_ready(self):
+        while not self.is_ready():
+            time.sleep(min(0.001, 0.25))
+        return self
+
+    def __array__(self, dtype=None, copy=None):
+        arr = np.asarray(self._inner)
+        return arr.astype(dtype) if dtype is not None else arr
+
+    @property
+    def shape(self):
+        return self._inner.shape
+
+    @property
+    def dtype(self):
+        return self._inner.dtype
+
+    def __getitem__(self, idx):
+        return np.asarray(self)[idx]
+
+
+class FaultInjector:
+    """Holds armed :class:`Fault`\\ s; the engine consults it at seams.
+
+    One injector can be shared by every engine in a degradation ladder
+    (the :class:`~repro.serving.resilient.ResilientEngine` threads
+    itself through) — path-scoped faults then hit exactly the rung they
+    name, which is what makes "primary fails, fallback serves"
+    testable.
+    """
+
+    def __init__(self, clock=time.monotonic):
+        self._clock = clock
+        self.faults: list[Fault] = []
+        self.log: list[tuple] = []       # (seam, path, bucket) per firing
+
+    # -- arming ------------------------------------------------------------
+
+    def arm(self, seam: str, *, path: str | None = None,
+            bucket: int | None = None, times: float = math.inf,
+            delay_s: float = 0.0) -> Fault:
+        fault = Fault(seam=seam, path=path, bucket=bucket, times=times,
+                      delay_s=delay_s)
+        self.faults.append(fault)
+        return fault
+
+    def disarm(self, fault: Fault | None = None) -> None:
+        """Remove one fault (or all of them)."""
+        if fault is None:
+            self.faults.clear()
+        else:
+            self.faults.remove(fault)
+
+    def fired(self, seam: str | None = None) -> int:
+        """Total firings, optionally restricted to one seam."""
+        return sum(1 for s, _, _ in self.log if seam is None or s == seam)
+
+    # -- seams (called by the engine) --------------------------------------
+
+    def _fire(self, seam: str, path, bucket) -> Fault | None:
+        for f in self.faults:
+            if f.matches(seam, path, bucket):
+                f.fired += 1
+                self.log.append((seam, path, bucket))
+                return f
+        return None
+
+    def check(self, seam: str, *, path=None, bucket=None) -> None:
+        """``compile`` / ``dispatch`` seam: raise when a fault fires."""
+        if self._fire(seam, path, bucket) is not None:
+            raise InjectedFault(seam, path=path, bucket=bucket)
+
+    def corrupt_input(self, x, *, path=None, bucket=None):
+        """``input_nan`` seam: NaN the first event of the chunk."""
+        if self._fire("input_nan", path, bucket) is not None:
+            x = np.array(x, copy=True)
+            x[0] = np.nan
+        return x
+
+    def wrap_output(self, out, *, path=None, bucket=None):
+        """``output_nan`` / ``stuck`` / ``latency`` seams, applied to the
+        freshly dispatched (un-realized) result."""
+        f = self._fire("latency", path, bucket)
+        if f is not None:
+            time.sleep(f.delay_s)
+        f = self._fire("output_nan", path, bucket)
+        if f is not None:
+            return np.full(out.shape, np.nan, np.float32)
+        f = self._fire("stuck", path, bucket)
+        if f is not None:
+            return StuckBuffer(out, self._clock() + f.delay_s, self._clock)
+        return out

@@ -11,6 +11,11 @@ numbers the same way:
 * KGPS (thousand graphs = events per second) is events / wall over the
   post-warmup stream, not the sum of latencies — with double buffering
   the pipeline sustains more than 1/latency batches per second.
+* fault-tolerance events (shed requests, path demotions/re-promotions,
+  watchdog timeouts, non-finite batches, ...) land in monotonic named
+  COUNTERS (:meth:`ServingMetrics.incr`) — the health state machine
+  (:mod:`repro.serving.resilient`) and ``trigger_serve --health`` read
+  them off the same snapshot as the latency percentiles.
 """
 
 from __future__ import annotations
@@ -48,9 +53,23 @@ class ServingMetrics:
             maxlen=window)
         self._wall_s = 0.0       # accumulated post-warmup stream wall time
         self._wall_events = 0    # valid events covered by _wall_s
+        self._counters: collections.Counter[str] = collections.Counter()
 
     def record_batch(self, latency_s: float, events: int, bucket: int) -> None:
         self._records.append(BatchRecord(latency_s, events, bucket))
+
+    def incr(self, name: str, n: int = 1) -> None:
+        """Bump a monotonic named counter (shed / demotion / timeout /
+        ... — the fault-tolerance layer's accounting surface)."""
+        self._counters[name] += n
+
+    def counter(self, name: str) -> int:
+        return self._counters[name]
+
+    @property
+    def counters(self) -> dict:
+        """Copy of all non-zero counters (stable for snapshotting)."""
+        return {k: v for k, v in sorted(self._counters.items()) if v}
 
     def record_wall(self, wall_s: float, events: int) -> None:
         """Fold a measured stream segment into the sustained-KGPS estimate."""
@@ -84,4 +103,5 @@ class ServingMetrics:
             "per_event_p99_us": p99_us / mean_events if evs else float("nan"),
             "kgps": kgps(self._wall_events, self._wall_s),
             "buckets": sorted({r.bucket for r in self._records}),
+            "counters": self.counters,
         }

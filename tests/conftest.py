@@ -6,6 +6,13 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "chaos: fault-injection suite for the resilient serving layer "
+        "(runs in tier-1 AND standalone in CI's chaos job via -m chaos)")
+
+
 @pytest.fixture
 def rng():
     return np.random.RandomState(0)

@@ -118,6 +118,76 @@ def test_describe_mentions_every_path():
         assert n in table
 
 
+# -- fallback chains (the serving degradation ladder's contract) ---------
+
+
+def _temp_spec(name, *, pallas=False, fallback=None):
+    base = paths.get("sr")
+    return paths.PathSpec(name=name, forward=base.forward, ref=base.ref,
+                          pallas=pallas, fallback=fallback)
+
+
+@pytest.fixture
+def scratch_registry():
+    """Register-and-cleanup helper for chain-shape tests."""
+    added = []
+
+    def add(name, **kw):
+        paths.register(_temp_spec(name, **kw), overwrite=True)
+        added.append(name)
+
+    yield add
+    for name in added:
+        paths._REGISTRY.pop(name, None)
+
+
+def test_fallback_chain_of_builtin_paths():
+    assert paths.fallback_chain("fused_full") == ["fused_full", "sr_split"]
+    assert paths.fallback_chain("int8_fused_full") == [
+        "int8_fused_full", "fused_full", "sr_split"]
+    # a terminal non-Pallas path is its own one-rung chain
+    assert paths.fallback_chain("sr") == ["sr"]
+
+
+def test_every_registered_chain_validates():
+    """Registry-wide invariant the resilient engine relies on: every
+    path's chain resolves and bottoms out in a non-Pallas rung."""
+    chains = paths.validate_fallbacks()
+    assert set(chains) == set(paths.available())
+    for chain in chains.values():
+        assert not paths.get(chain[-1]).pallas
+
+
+def test_fallback_chain_rejects_cycles(scratch_registry):
+    scratch_registry("_t_a", fallback="_t_b")
+    scratch_registry("_t_b", fallback="_t_a")
+    with pytest.raises(ValueError, match="cycle"):
+        paths.fallback_chain("_t_a")
+
+
+def test_fallback_chain_rejects_unknown_link(scratch_registry):
+    scratch_registry("_t_dangling", fallback="_t_no_such_path")
+    with pytest.raises(ValueError, match="unknown forward path"):
+        paths.fallback_chain("_t_dangling")
+
+
+def test_fallback_chain_rejects_pallas_terminal(scratch_registry):
+    scratch_registry("_t_kernel_only", pallas=True)
+    with pytest.raises(ValueError, match="non-Pallas"):
+        paths.fallback_chain("_t_kernel_only")
+
+
+def test_describe_prints_fallback_chains():
+    table = paths.describe()
+    assert "fallback chain" in table
+    fused_row = next(ln for ln in table.splitlines()
+                     if ln.startswith("fused_full"))
+    assert "sr_split" in fused_row
+    int8_row = next(ln for ln in table.splitlines()
+                    if ln.startswith("int8_fused_full"))
+    assert "fused_full>sr_split" in int8_row
+
+
 # -- numerics: every registered path vs its spec-declared reference ------
 
 
@@ -431,3 +501,39 @@ def test_check_regression_still_gates_existing_entries(tmp_path):
                                 "--baseline-dir", str(base_dir),
                                 "--bootstrap"])
     assert rc == 1
+
+
+def test_check_regression_missing_baseline_fails_with_recipe(tmp_path,
+                                                             capsys):
+    """No committed baseline and no --bootstrap: the gate must FAIL (a
+    silently green gate hides regressions forever) and print the exact
+    bootstrap command instead of a raw traceback."""
+    check_regression = pytest.importorskip("benchmarks.check_regression")
+    fresh_dir, base_dir = tmp_path / "fresh", tmp_path / "base"
+    fresh_dir.mkdir(), base_dir.mkdir()
+    for name in ("BENCH_fused.json", "BENCH_serving.json"):
+        (fresh_dir / name).write_text(json.dumps(_fused_doc({})))
+    rc = check_regression.main(["--fresh-dir", str(fresh_dir),
+                                "--baseline-dir", str(base_dir)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "no committed baseline" in out
+    assert "--bootstrap" in out          # the remedy, spelled out
+    assert "Traceback" not in out
+
+
+def test_check_regression_corrupt_baseline_warns_and_fails(tmp_path,
+                                                           capsys):
+    """A truncated/garbage baseline file is a clear verdict with a
+    regeneration recipe, never a JSONDecodeError traceback."""
+    check_regression = pytest.importorskip("benchmarks.check_regression")
+    fresh_dir, base_dir = tmp_path / "fresh", tmp_path / "base"
+    fresh_dir.mkdir(), base_dir.mkdir()
+    for name in ("BENCH_fused.json", "BENCH_serving.json"):
+        (fresh_dir / name).write_text(json.dumps(_fused_doc({})))
+        (base_dir / name).write_text("{ not json")
+    rc = check_regression.main(["--fresh-dir", str(fresh_dir),
+                                "--baseline-dir", str(base_dir)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "not valid JSON" in out and "benchmarks.run" in out

@@ -195,6 +195,62 @@ def test_batcher_rejects_empty_request():
         bat.submit(0, np.zeros((0, 2), np.float32))
 
 
+def test_batcher_full_bucket_and_deadline_same_tick_flush_once():
+    """Race corner: a submission that fills the bucket at the exact tick
+    the oldest request's deadline expires must flush exactly once — the
+    full-bucket cut wins, and the same-tick poll sees an empty queue
+    instead of re-flushing the same events."""
+    bat = DeadlineBatcher([8], deadline_s=0.010, clock=lambda: 0.0)
+    bat.submit(0, np.ones((4, 2), np.float32), now=1.000)
+    # t = 1.010: deadline expired AND this submission reaches 8 events
+    plans = bat.submit(1, np.ones((4, 2), np.float32), now=1.010)
+    assert [p.n_valid for p in plans] == [8]
+    assert plans[0].reason == "full"
+    assert bat.pending_events == 0
+    assert bat.poll(now=1.010) == []           # nothing left to re-flush
+    # every event landed in exactly one plan
+    segs = [(rid, stop - start) for p in plans
+            for rid, start, stop in p.requests]
+    assert segs == [(0, 4), (1, 4)]
+
+
+def test_batcher_full_cut_tail_keeps_its_own_deadline():
+    """When the same-tick cut leaves a tail (the filling request
+    straddles the bucket), the tail is NOT double-flushed at that tick —
+    it waits on its own submit-time fuse and drains exactly once when
+    THAT expires."""
+    bat = DeadlineBatcher([8], deadline_s=0.010, clock=lambda: 0.0)
+    bat.submit(0, np.ones((4, 2), np.float32), now=1.000)
+    plans = bat.submit(1, np.ones((7, 2), np.float32), now=1.010)
+    assert [p.n_valid for p in plans] == [8] and bat.pending_events == 3
+    assert bat.poll(now=1.010) == []           # tail submitted at 1.010:
+    plans += bat.poll(now=1.020)               # its fuse burns at 1.020
+    assert [p.n_valid for p in plans] == [8, 3]
+    assert plans[1].reason == "deadline"
+    assert bat.poll(now=1.020) == []
+    assert sum(stop - start for p in plans
+               for rid, start, stop in p.requests if rid == 1) == 7
+
+
+def test_batcher_zero_deadline_flushes_on_first_poll():
+    """deadline_s=0 means "never hold a request": the poll at the very
+    same tick as the submission flushes it."""
+    bat = DeadlineBatcher([8], deadline_s=0.0, clock=lambda: 0.0)
+    bat.submit(0, np.ones((2, 2), np.float32), now=5.0)
+    (plan,) = bat.poll(now=5.0)
+    assert plan.n_valid == 2 and plan.reason == "deadline"
+    assert plan.oldest_wait_s == 0.0
+
+
+def test_batcher_negative_deadline_flushes_immediately():
+    """A negative budget (clock skew, already-late request) must behave
+    like zero — flush on the next poll, not wedge the queue forever."""
+    bat = DeadlineBatcher([8], deadline_s=-1.0, clock=lambda: 0.0)
+    bat.submit(0, np.ones((3, 2), np.float32), now=2.0)
+    (plan,) = bat.poll(now=2.0)
+    assert plan.n_valid == 3 and plan.reason == "deadline"
+
+
 # -- metrics -------------------------------------------------------------
 
 

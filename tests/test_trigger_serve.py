@@ -112,3 +112,32 @@ def test_cli_main_fused_full_interpret(capsys):
                         "--warmup", "1"])
     out = capsys.readouterr().out
     assert "KGPS" in out and "level=full" in out
+
+
+def test_cli_list_paths_prints_fallback_chains_and_policy(capsys):
+    """--list-paths is the operator's view of the degradation ladder:
+    the registry table must carry each path's fallback chain next to
+    its resolved bucket policy."""
+    trigger_serve.main(["--list-paths", "--n-objects", "8", "--batch", "16"])
+    out = capsys.readouterr().out
+    assert "fallback chain" in out
+    assert "fused_full>sr_split" in out      # int8 path's two-rung chain
+    assert "bucket policy" in out
+
+
+def test_cli_health_flag_reports_state(capsys):
+    trigger_serve.main(["--forward", "sr", "--n-objects", "8",
+                        "--batch", "8", "--batches", "5", "--warmup", "1",
+                        "--health"])
+    out = capsys.readouterr().out
+    assert "[health] state=healthy" in out
+    assert "chain=sr" in out
+    assert "path=sr" in out                  # serving line + bucket detail
+
+
+def test_cli_reports_serving_path_and_chain(capsys):
+    trigger_serve.main(["--forward", "fused_full", "--interpret",
+                        "--n-objects", "8", "--batch", "4", "--batches", "4",
+                        "--warmup", "1"])
+    out = capsys.readouterr().out
+    assert "path=fused_full" in out and "chain fused_full>sr_split" in out
