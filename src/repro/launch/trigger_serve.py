@@ -10,204 +10,40 @@ a different position in the same pipeline: it amortizes weight traffic
 over a batch of events, so the serving question becomes *sustained
 throughput at bounded tail latency* rather than single-jet latency.
 
-All the machinery lives in :mod:`repro.serving` now — this module is the
-thin CLI: build a :class:`~repro.serving.ServingEngine` for the chosen
-forward path, pump a synthetic event stream through its double-buffered
-device-feed loop (:func:`~repro.serving.serve_stream`, re-exported here),
-and print the rolling KGPS / p50 / p99 next to the TPU-model roofline
-for the bucket the stream rode in.  ``--batch`` need not match a compile
-bucket: the engine pads to the nearest autotuner ladder rung.
-
-On CPU (CI) the pipeline degenerates to a correct but synchronous loop;
-the numbers are only meaningful on a real accelerator.  ``--forward``
-accepts any registered path (:mod:`repro.core.paths`) — the choices,
-the params transform (e.g. int8 quantization) and the roofline level
-all come off the path's ``PathSpec``, so a newly registered path is
-servable here with zero CLI edits; ``--list-paths`` prints the
-registry (including each path's fallback chain and bucket policy).
-``fused_full`` is the production path, with ``--interpret`` available
-(auto-enabled off-TPU) so the whole driver can be smoke-tested off-TPU.
+ALL the behavior lives in :mod:`repro.serving.trigger` — this module is
+the thin shell (argparse + one call), and ``tests/test_thin_cli.py``
+keeps it that way with an AST guard: no batching, engine or scheduling
+logic may creep back in here.  ``make_stream`` and ``serve_stream`` are
+re-exported for drivers and tests that historically imported them from
+this module.
 
 Serving goes through the fault-tolerant
 :class:`~repro.serving.resilient.ResilientEngine` — the degradation
 ladder, deadline shedding and watchdog are always armed.  ``--health``
 prints the health state machine's report after the run; ``--drill
 SEAM[:TIMES[:DELAY_S]]`` arms the fault-injection harness
-(:mod:`repro.serving.faults`) against the primary path and pumps the
-stream through the guarded per-request path instead of the raw feed
-loop, so every degraded-mode transition can be exercised from the
-command line (see EXPERIMENTS.md §Fault drills).
+(:mod:`repro.serving.faults`) and serves through the guarded
+per-request path (see EXPERIMENTS.md §Fault drills); ``--list-paths``
+prints the forward-path registry with each path's fallback chain and
+bucket policy.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import numpy as np
-
-from repro.core import paths
-from repro.core.interaction_net import JediNetConfig, init
-from repro.data.jets import make_jets
-from repro.serving import (  # noqa: F401  (serve_stream re-exported for drivers/tests)
-    FaultInjector,
-    ResilientEngine,
-    percentile,
-    serve_stream,
+from repro.serving import serve_stream  # noqa: F401  (re-export: tests/drivers)
+from repro.serving.trigger import (  # noqa: F401  (make_stream re-exported)
+    build_trigger_cli,
+    make_stream,
+    run_trigger_cli,
 )
-
-
-def make_stream(rng, n_batches: int, batch: int, n_objects: int,
-                n_features: int):
-    """Pre-generated synthetic event stream, fully materialized so the
-    per-jet numpy generation loop stays OFF the timed serving path — the
-    latencies below must measure transfer+compute, not the generator."""
-    return [make_jets(rng, batch, n_objects, n_features)[0]
-            for _ in range(n_batches)]
-
-
-def _print_health(engine) -> None:
-    """The health state machine's operator view (``--health``)."""
-    h = engine.health()
-    print(f"[health] state={h['state']} base={h['base_path']} "
-          f"chain={'>'.join(h['chain'])} inflight={h['inflight']}")
-    for bucket, st in h["buckets"].items():
-        probe = ("-" if st["next_probe_in_s"] is None
-                 else f"{st['next_probe_in_s']:.2f}s")
-        print(f"  bucket {bucket:>5}: path={st['path']} level={st['level']} "
-              f"demotions={st['demotions']} next_probe_in={probe}"
-              f"{' DOWN' if st['down'] else ''}")
-    if h["counters"]:
-        print("  counters: " + " ".join(f"{k}={v}"
-                                        for k, v in h["counters"].items()))
-    else:
-        print("  counters: (none)")
-
-
-def _parse_drills(specs, injector, path):
-    """Arm ``SEAM[:TIMES[:DELAY_S]]`` drill specs against ``path``."""
-    for spec in specs:
-        parts = spec.split(":")
-        times = float(parts[1]) if len(parts) > 1 else 1.0
-        delay = float(parts[2]) if len(parts) > 2 else 0.05
-        injector.arm(parts[0], path=path, times=times, delay_s=delay)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--n-objects", type=int, default=30)
-    ap.add_argument("--n-features", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=256,
-                    help="events per stream tick (the trigger's time slice)")
-    ap.add_argument("--batches", type=int, default=40)
-    ap.add_argument("--warmup", type=int, default=2)
-    ap.add_argument("--forward", default="fused_full",
-                    choices=paths.available())
-    ap.add_argument("--compute-dtype", default="float32",
-                    choices=["float32", "bfloat16"])
-    ap.add_argument("--interpret", action="store_true",
-                    help="force Pallas interpret mode (auto-enabled off-TPU)")
-    ap.add_argument("--list-paths", action="store_true",
-                    help="print the forward-path registry and exit")
-    ap.add_argument("--health", action="store_true",
-                    help="print the engine health report after the run")
-    ap.add_argument("--drill", action="append", default=None,
-                    metavar="SEAM[:TIMES[:DELAY_S]]",
-                    help="arm a fault against the primary path (repeatable; "
-                         "seams: compile, dispatch, input_nan, output_nan, "
-                         "latency, stuck) and serve through the guarded "
-                         "per-request path")
-    ap.add_argument("--watchdog-s", type=float, default=30.0,
-                    help="stuck-dispatch watchdog budget")
-    ap.add_argument("--deadline-ms", type=float, default=None,
-                    help="per-tick serve deadline (drill path); expired "
-                         "ticks are shed, not dispatched")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
-    if args.list_paths:
-        # Registry table PLUS each path's resolved bucket policy (per-
-        # sample VMEM model, weight residency, the ladder it earns) for
-        # this CLI's config — the operator-facing answer to "why does
-        # the quantized path get deeper buckets than fp32?".
-        cfg = JediNetConfig(n_objects=args.n_objects,
-                            n_features=args.n_features,
-                            compute_dtype=args.compute_dtype)
-        params = init(jax.random.PRNGKey(args.seed), cfg)
-        print(paths.describe(cfg=cfg, params=params,
-                             max_batch=max(args.batch, 1)))
-        return
-
-    cfg = JediNetConfig(n_objects=args.n_objects, n_features=args.n_features,
-                        compute_dtype=args.compute_dtype)
-    params = init(jax.random.PRNGKey(args.seed), cfg)
-    injector = None
-    if args.drill:
-        injector = FaultInjector()
-        _parse_drills(args.drill, injector, args.forward)
-    engine = ResilientEngine(params, cfg, forward=args.forward,
-                             interpret=args.interpret or None,
-                             max_batch=max(args.batch, 1),
-                             injector=injector,
-                             watchdog_s=args.watchdog_s)
-
-    rng = np.random.RandomState(args.seed)
-    stream = make_stream(rng, args.batches, args.batch, args.n_objects,
-                         args.n_features)
-
-    if args.drill:
-        # guarded per-request path: every batch rides the full ladder —
-        # NaN detection, watchdog, shedding — so injected faults are
-        # absorbed, counted, and visible in --health, never raised.
-        served = shed = 0
-        t0 = time.perf_counter()
-        for tick in stream:
-            deadline = (None if args.deadline_ms is None
-                        else engine._clock() + args.deadline_ms * 1e-3)
-            out = engine.infer(tick, deadline=deadline)
-            if out is None:
-                shed += 1
-            else:
-                served += 1
-        wall = time.perf_counter() - t0
-        snap = engine.metrics.snapshot()
-        print(f"[trigger_serve] DRILL forward={args.forward} "
-              f"faults={','.join(args.drill)} ticks={args.batches} "
-              f"served={served} shed={shed} wall={wall:.3f}s")
-        print(f"  latency    p50 {snap['p50_us']:8.1f} us   "
-              f"p99 {snap['p99_us']:8.1f} us  per batch")
-        _print_health(engine)
-        return
-
-    res = engine.run_stream(stream, warmup=args.warmup)
-
-    if not res["latencies"]:
-        print("[trigger_serve] stream too short for stats "
-              f"(need > warmup={args.warmup} batches, got {args.batches})")
-        if args.health:
-            _print_health(engine)
-        return
-
-    snap = engine.metrics.snapshot()
-    bucket = res["bucket"]
-    model = engine.roofline([bucket])[bucket]
-
-    print(f"[trigger_serve] forward={args.forward} "
-          f"n_objects={args.n_objects} batch={args.batch} bucket={bucket} "
-          f"dtype={args.compute_dtype} shards={engine.n_shards}")
-    print(f"  sustained  {snap['kgps']:8.1f} KGPS  "
-          f"({res['events']} events / {res['wall_s']:.3f} s)")
-    print(f"  latency    p50 {snap['p50_us']:8.1f} us   "
-          f"p99 {snap['p99_us']:8.1f} us  per batch")
-    print(f"  per-event  p50 {snap['per_event_p50_us']:8.3f} us")
-    print(f"  roofline   modeled {model['step_us']:.1f} us/step "
-          f"({model['bound']}-bound, {model['hbm_bytes'] / 1e6:.2f} MB HBM, "
-          f"level={model['fused_level']})")
-    print(f"  serving    path={engine.active_path(bucket)} "
-          f"(chain {'>'.join(engine.chain)})")
-    if args.health:
-        _print_health(engine)
+    build_trigger_cli(ap)
+    return run_trigger_cli(ap.parse_args(argv))
 
 
 if __name__ == "__main__":

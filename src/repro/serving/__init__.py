@@ -1,23 +1,40 @@
-"""Serving subsystem: sharded engine + deadline batcher + metrics.
+"""Serving subsystem: the unified fabric from request queue to kernels.
 
-The production layer between request traffic and the fused JEDI-net
-kernels — see engine.py for the architecture notes.
+One stack, four layers (see core.py for the architecture notes):
+
+* **core** — workload-agnostic :class:`ExecutionCore` + :class:`Workload`
+  protocol (compile cache, pad-to-bucket, async in-flight window,
+  watchdog, wall-union metrics, fault seams);
+* **workloads** — :class:`ServingEngine` (sharded trigger paths) and
+  :class:`LMEngine` (prefill + slot-recycling decode) instantiate the
+  core;
+* **resilience** — :class:`ResilientEngine` wraps a workload engine in
+  the degradation ladder / shedding / health state machine;
+* **front-end** — :class:`ServingLoop` drains a live request queue
+  through the :class:`DeadlineBatcher` into any of the above, with
+  bounded-inflight backpressure and per-request :class:`RequestFuture`
+  completion.
 """
 
 from repro.serving.batcher import BatchPlan, DeadlineBatcher
-from repro.serving.engine import (
+from repro.serving.core import (
+    ExecutionCore,
     PendingPlan,
     PendingResult,
-    ServingEngine,
     WatchdogTimeout,
+    Workload,
     serve_stream,
 )
+from repro.serving.engine import ServingEngine, TriggerWorkload
 from repro.serving.faults import Fault, FaultInjector, InjectedFault
+from repro.serving.lm import LMEngine, LMRequest, LMWorkload
+from repro.serving.loop import RequestFuture, ServingLoop
 from repro.serving.metrics import ServingMetrics, kgps, percentile
 from repro.serving.resilient import (
     NonFiniteOutput,
     ResilientEngine,
     ResilientPending,
+    ResilientPlan,
 )
 
 
@@ -33,18 +50,27 @@ def __getattr__(name):
 __all__ = [
     "BatchPlan",
     "DeadlineBatcher",
+    "ExecutionCore",
     "Fault",
     "FaultInjector",
     "InjectedFault",
+    "LMEngine",
+    "LMRequest",
+    "LMWorkload",
     "NonFiniteOutput",
     "PALLAS_PATHS",
     "PendingPlan",
     "PendingResult",
+    "RequestFuture",
     "ResilientEngine",
     "ResilientPending",
+    "ResilientPlan",
     "ServingEngine",
+    "ServingLoop",
     "ServingMetrics",
+    "TriggerWorkload",
     "WatchdogTimeout",
+    "Workload",
     "kgps",
     "percentile",
     "serve_stream",

@@ -1,76 +1,60 @@
-"""Sharded inference engine over the JEDI-net forward paths.
+"""Sharded trigger inference engine over the JEDI-net forward paths.
 
 The serving-tier counterpart of the paper's FPGA trigger pipeline: one
 object owning everything between "a batch of events exists on the host"
 and "logits are ready", for ANY registered forward path
-(:mod:`repro.core.paths`):
+(:mod:`repro.core.paths`).
+
+Since the fabric split, the generic machinery — warm compile cache,
+pad-to-bucket dispatch, async :class:`~repro.serving.core.PendingResult`
+in-flight window, watchdog, overlap-safe wall-union KGPS accounting,
+fault seams — lives in :class:`~repro.serving.core.ExecutionCore` and is
+shared with every other workload (LM decode, recsys).  This module adds
+only what is trigger-specific:
 
 * **data-parallel sharding** — the batch axis is ``shard_map``-ped over
   the local device mesh (``launch/mesh.make_host_mesh``); each device
   runs the whole fused kernel on its batch slice, the serving analogue
   of replicating the FPGA pipeline per link.  On one device the wrapper
   collapses to a plain ``jit``.
-* **warm compile cache** — callables are cached per
-  (path, bucket, event shape, dtype).  Requests are padded up to ladder
-  buckets (:func:`repro.kernels.autotune.bucket_ladder`), so arbitrary
-  request counts reuse a handful of compilations and padding never
-  forces a tile-degenerate recompile.
-* **double-buffered device feed** — :func:`serve_stream` overlaps the
-  next batch's host->device transfer with the current batch's compute
-  (the host-boundary analogue of the paper's ping-pong buffers between
-  pipeline stages).
-* **rolling accounting** — every dispatch lands in a shared
-  :class:`~repro.serving.metrics.ServingMetrics` (p50/p99/KGPS), with
-  padding rows excluded from event counts.
-* **async dispatch** — :meth:`ServingEngine.infer` with ``sync=False``
-  returns a :class:`PendingResult` without blocking, so a batcher can
-  flush the next plan while this one is still on the accelerator (the
-  device-queue analogue of ``serve_stream``'s H2D double buffering).
-  ``sync=True`` (the default) is the blocking escape hatch.
+* **PathSpec resolution** — forward fn, Pallas-ness, params transform
+  (e.g. int8 quantization), supported compute dtypes, VMEM working set
+  for the bucket ladder, roofline level are all read off the path's
+  :class:`~repro.core.paths.PathSpec`; registering a new path makes it
+  servable with no engine edits.
+* **per-path bucket ladder** — buckets come from
+  ``spec.bucket_ladder`` scaled to the mesh, so quantized paths (int8
+  weights resident at 1 B/element) earn deeper ladders with no engine
+  knowledge of why.
 
-Everything path-specific — forward fn, Pallas-ness, params transform
-(e.g. int8 quantization), supported compute dtypes, VMEM working set
-for the bucket ladder, roofline level — is read off the path's
-:class:`~repro.core.paths.PathSpec`; registering a new path makes it
-servable with no engine edits.
+:class:`TriggerWorkload` is the :class:`~repro.serving.core.Workload`
+declaration; :class:`ServingEngine` composes it with the core and keeps
+the historical engine API (``infer`` / ``run_plan`` / ``run_stream`` /
+``warm`` / ``roofline``).
 """
 
 from __future__ import annotations
 
 import functools
-import threading
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from jax.sharding import PartitionSpec as P
 
 from repro.core import paths as forward_paths
-from repro.kernels import autotune
 from repro.launch.mesh import make_host_mesh
 from repro.parallel.sharding import shard_map_compat
-from repro.serving.metrics import ServingMetrics, kgps
-
-# In-flight dispatch depth for chunked infer(): enough to hide pad/H2D
-# behind compute, small enough that a huge request can't pin unbounded
-# device buffers.
-MAX_INFLIGHT_CHUNKS = 4
-
-# Retained merged busy-window intervals for overlap-safe KGPS wall
-# accounting — far more than any realistic number of concurrently
-# outstanding PendingResults, small enough that a long-running engine
-# stays O(1) per dispatch.
-_MAX_WALL_WINDOWS = 64
-
-
-class WatchdogTimeout(RuntimeError):
-    """A dispatched result failed to become ready within the watchdog
-    budget (``PendingResult.result(timeout_s=...)``).  The serve loop
-    must never block forever on a wedged dispatch — the resilience
-    layer catches this, counts it, and re-serves via the fallback
-    chain."""
+from repro.serving.core import (  # noqa: F401  (re-exported: historical home)
+    MAX_INFLIGHT_CHUNKS,
+    ExecutionCore,
+    PendingPlan,
+    PendingResult,
+    WatchdogTimeout,
+    Workload,
+    serve_stream,
+)
+from repro.serving.metrics import ServingMetrics
 
 
 def __getattr__(name):
@@ -83,159 +67,17 @@ def __getattr__(name):
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-def serve_stream(fwd, stream, *, warmup: int = 2, metrics=None, bucket=None):
-    """Double-buffered device-feed loop; returns per-batch latencies.
+class TriggerWorkload(Workload):
+    """Jet-classification over one forward path, sharded over the mesh.
 
-    ``fwd`` must be an async-dispatch callable (jitted) taking a host or
-    device array; latencies are seconds from host handoff to
-    logits-ready.  Batch k+1's ``device_put`` is issued while batch k is
-    still computing, so H2D transfer hides behind compute.  The first
-    ``warmup`` batches (compile + cache warm) are excluded from stats;
-    a stream no longer than ``warmup`` yields empty stats, not a crash.
-
-    When ``metrics`` is given every post-warmup batch is recorded there
-    (``bucket`` labels the records; defaults to the batch row count).
+    The :class:`~repro.serving.core.Workload` declaration for the
+    paper's trigger tier: dense ``(batch, N_o, P)`` event batches through
+    a registered :class:`~repro.core.paths.PathSpec`, data-parallel over
+    the local device mesh.
     """
-    latencies = []
-    events = 0
-    it = iter(stream)
-
-    # prime the pipeline: first transfer issued before the loop body
-    try:
-        nxt = jax.device_put(next(it))
-    except StopIteration:
-        return latencies, events, 0.0
-
-    # wall time starts at the last warmup batch; with no warmup it starts
-    # here, so KGPS is well-defined for any stream length
-    t_start = time.perf_counter() if warmup == 0 else None
-    k = 0
-    while nxt is not None:
-        cur = nxt
-        t0 = time.perf_counter()
-        out = fwd(cur)                      # async dispatch
-        try:
-            nxt = jax.device_put(next(it))  # overlap next H2D with compute
-        except StopIteration:
-            nxt = None
-        jax.block_until_ready(out)
-        t1 = time.perf_counter()
-        k += 1
-        if k <= warmup:                     # exclude compile from stats
-            t_start = time.perf_counter()
-            continue
-        latencies.append(t1 - t0)
-        events += cur.shape[0]
-        if metrics is not None:
-            metrics.record_batch(t1 - t0, cur.shape[0],
-                                 bucket or cur.shape[0])
-    wall = (time.perf_counter() - t_start) if t_start else 0.0
-    return latencies, events, wall
-
-
-class PendingResult:
-    """In-flight inference: dispatched to the device, not yet waited on.
-
-    Holds the un-blocked device buffers of one :meth:`ServingEngine.infer`
-    call.  ``result()`` blocks (once), records metrics per chunk, and
-    returns the host logits.  Recorded latency is dispatch-to-REALIZATION
-    (an upper bound on dispatch-to-ready: the host has no device-side
-    completion timestamp) — realize promptly, or the caller's idle time
-    lands in the percentiles.  Wall time for KGPS is overlap-safe in any
-    realization order (see ``ServingEngine._record_wall_window``).
-    """
-
-    def __init__(self, engine, chunks, *, record: bool = True):
-        self._engine = engine
-        self._chunks = chunks            # [(device_out, n_valid, bucket, t0)]
-        self._record = record
-        self._out = None
-
-    @property
-    def ready(self) -> bool:
-        """True when every dispatched buffer is done (non-blocking where
-        the jax version exposes readiness; conservatively False else)."""
-        try:
-            return all(c[0].is_ready() for c in self._chunks)
-        except AttributeError:
-            return False
-
-    @staticmethod
-    def _wait_ready(out, deadline: float | None) -> None:
-        """Block until ``out`` is ready; with a ``deadline`` (absolute
-        ``perf_counter`` time), raise :class:`WatchdogTimeout` past it —
-        a wedged dispatch must park the watchdog, not the whole serve
-        loop.  The timed wait blocks in a daemon thread (the efficient
-        runtime wait, zero poll-quantization overhead on the fast path);
-        on timeout the thread is abandoned with the wedged buffer.
-        Results without a readiness probe (plain host arrays) block
-        directly."""
-        if deadline is None or getattr(out, "is_ready", None) is None:
-            jax.block_until_ready(out)
-            return
-        done = threading.Event()
-        threading.Thread(
-            target=lambda: (jax.block_until_ready(out), done.set()),
-            daemon=True).start()
-        if not done.wait(max(0.0, deadline - time.perf_counter())):
-            raise WatchdogTimeout(
-                "dispatched result not ready within the watchdog "
-                "budget; abandoning the in-flight buffer")
-
-    def result(self, *, timeout_s: float | None = None) -> np.ndarray:
-        if self._out is None:
-            deadline = (None if timeout_s is None
-                        else time.perf_counter() + timeout_s)
-            outs = []
-            t_first, t_last, events = None, None, 0
-            for out, n_valid, bucket, t0 in self._chunks:
-                self._wait_ready(out, deadline)
-                t1 = time.perf_counter()
-                if self._record:
-                    self._engine.metrics.record_batch(t1 - t0, n_valid, bucket)
-                t_first = t0 if t_first is None else t_first
-                t_last, events = t1, events + n_valid
-                outs.append(np.asarray(out)[:n_valid])
-            if self._record and t_first is not None:
-                # ONE wall window for the whole dispatch, merged into the
-                # engine's busy-time union: overlapped chunks AND
-                # overlapped concurrent dispatches — realized in ANY
-                # order — must not double-count elapsed time (KGPS is
-                # events/wall, not events/sum-of-latencies)
-                self._engine._record_wall_window(t_first, t_last, events)
-            self._out = np.concatenate(outs, axis=0)
-            self._chunks = ()            # free device buffers
-        return self._out
-
-
-class PendingPlan:
-    """A dispatched :class:`~repro.serving.batcher.BatchPlan` awaiting
-    realization: ``result()`` blocks and reassembles per-request logits."""
-
-    def __init__(self, pending: PendingResult, requests):
-        self._pending = pending
-        self._requests = requests
-
-    @property
-    def ready(self) -> bool:
-        return self._pending.ready
-
-    def result(self, *, timeout_s: float | None = None) -> dict:
-        logits = self._pending.result(timeout_s=timeout_s)
-        out: dict[int, list] = {}
-        for rid, start, stop in self._requests:
-            out.setdefault(rid, []).append(logits[start:stop])
-        return {rid: np.concatenate(parts, axis=0)
-                for rid, parts in out.items()}
-
-
-class ServingEngine:
-    """Bucketed, sharded, metered inference over one forward path."""
 
     def __init__(self, params, cfg, *, forward: str = "fused_full",
-                 interpret: bool | None = None, mesh="auto",
-                 bucket_sizes=None, max_batch: int = 1024,
-                 metrics: ServingMetrics | None = None, injector=None):
+                 interpret: bool | None = None, mesh="auto"):
         self.spec = forward_paths.get(forward)   # raises listing choices
         if not self.spec.supports_dtype(cfg.compute_dtype):
             raise ValueError(
@@ -245,7 +87,7 @@ class ServingEngine:
         # here — every dispatch then serves the transformed weights
         self.params = self.spec.prepare_params(params)
         self.cfg = cfg
-        self.forward = forward
+        self.name = forward
         # compiled Pallas needs a real TPU; fall back to interpret elsewhere
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
@@ -254,57 +96,33 @@ class ServingEngine:
             mesh = make_host_mesh() if len(jax.devices()) > 1 else None
         self.mesh = mesh
         self.n_shards = int(np.prod(mesh.devices.shape)) if mesh else 1
-        self.metrics = metrics if metrics is not None else ServingMetrics()
-        # Fault-injection seams (serving/faults.py): None in production.
-        # The injector is consulted at compile, dispatch, input and
-        # output boundaries — see the seam calls below.
-        self.injector = injector
 
-        if bucket_sizes is None:
-            # ceil so the top rung still covers max_batch after the
-            # per-device ladder is scaled back up by the shard count.
-            # The ladder is the PATH'S policy (spec.bucket_ladder):
-            # per-sample working set AND weight-residency reservation
-            # both come off the spec, so quantized paths (int8 weights
-            # resident at 1 B/element) earn deeper ladders here with no
-            # engine knowledge of why.
-            per_dev = -(-max_batch // self.n_shards)
-            ladder = self.spec.bucket_ladder(self.cfg, self.params, per_dev)
-            bucket_sizes = [b * self.n_shards for b in ladder]
-        self.bucket_sizes = sorted(int(b) for b in bucket_sizes)
-        # merged busy-time intervals (perf_counter): KGPS wall is the
-        # UNION of dispatch windows, never a double-counted sum
-        self._wall_windows: list[tuple[float, float]] = []
+    def bucket_ladder(self, max_batch: int) -> list[int]:
+        # ceil so the top rung still covers max_batch after the
+        # per-device ladder is scaled back up by the shard count.
+        # The ladder is the PATH'S policy (spec.bucket_ladder):
+        # per-sample working set AND weight-residency reservation
+        # both come off the spec, so quantized paths (int8 weights
+        # resident at 1 B/element) earn deeper ladders here with no
+        # fabric knowledge of why.
+        per_dev = -(-max_batch // self.n_shards)
+        ladder = self.spec.bucket_ladder(self.cfg, self.params, per_dev)
+        return [b * self.n_shards for b in ladder]
+
+    def validate_buckets(self, bucket_sizes) -> None:
         if self.mesh is not None:
-            bad = [b for b in self.bucket_sizes if b % self.n_shards]
+            bad = [b for b in bucket_sizes if b % self.n_shards]
             if bad:
                 raise ValueError(
                     f"buckets {bad} do not divide the {self.n_shards}-way "
                     "data mesh")
-        self._cache: dict[tuple, object] = {}
 
-    # -- compile-cache management ------------------------------------------
-
-    def _cache_key(self, bucket: int) -> tuple:
+    def cache_key(self, bucket) -> tuple:
         c = self.cfg
-        return (self.forward, int(bucket), c.n_objects, c.n_features,
+        return (self.name, int(bucket), c.n_objects, c.n_features,
                 c.compute_dtype, self.interpret, self.n_shards)
 
-    def compiled_for(self, bucket: int):
-        """The cached jitted callable for one bucket shape (built on miss)."""
-        key = self._cache_key(bucket)
-        fn = self._cache.get(key)
-        if fn is None:
-            if self.injector is not None:
-                # compile seam: fires only on a cache MISS — a warm
-                # callable never recompiles, so it cannot re-fail here
-                self.injector.check("compile", path=self.forward,
-                                    bucket=bucket)
-            fn = self._build()
-            self._cache[key] = fn
-        return fn
-
-    def _build(self):
+    def build(self, bucket=None):
         fn = self.spec.forward
         if self.spec.pallas:
             fn = functools.partial(fn, interpret=self.interpret)
@@ -319,151 +137,57 @@ class ServingEngine:
                                     out_specs=P("data"))
         return jax.jit(functools.partial(call, self.params))
 
-    @property
-    def cache_size(self) -> int:
-        return len(self._cache)
-
-    def _record_wall_window(self, t0: float, t1: float, events: int) -> None:
-        """Record ``events`` over the part of [t0, t1] not already counted.
-
-        Maintains the union of busy windows, so overlapping dispatches
-        realized in any order contribute exactly their NEW coverage to
-        the KGPS wall — never a double-counted sum, never dropped time.
-        The merged list stays tiny: contiguous serving collapses to one
-        interval.
-        """
-        segs = [(t0, t1)]
-        for s, e in self._wall_windows:        # subtract existing coverage
-            nxt = []
-            for a, b in segs:
-                if e <= a or s >= b:
-                    nxt.append((a, b))
-                    continue
-                if a < s:
-                    nxt.append((a, s))
-                if e < b:
-                    nxt.append((e, b))
-            segs = nxt
-        self._wall_windows.append((t0, t1))
-        self._wall_windows.sort()
-        merged = []
-        for s, e in self._wall_windows:        # compact
-            if merged and s <= merged[-1][1]:
-                merged[-1] = (merged[-1][0], max(merged[-1][1], e))
-            else:
-                merged.append((s, e))
-        # bound the list: out-of-order realization is bounded by the
-        # outstanding PendingResults, so ancient windows can be dropped —
-        # a pathologically stale realization then at worst over-counts a
-        # little wall, it never corrupts unboundedly
-        self._wall_windows = merged[-_MAX_WALL_WINDOWS:]
-        self.metrics.record_wall(sum(b - a for a, b in segs), events)
-
-    def bucket_for(self, n_events: int) -> int:
-        """Smallest bucket holding ``n_events`` (largest if none do)."""
-        return autotune.bucket_for(self.bucket_sizes, n_events)
-
-    def warm(self, buckets=None) -> None:
-        """Pre-compile (and pre-run once) the given buckets — compile cost
-        paid before traffic arrives, not on the first unlucky request."""
+    def placeholder(self, bucket: int) -> np.ndarray:
         c = self.cfg
-        for b in buckets if buckets is not None else self.bucket_sizes:
-            x = np.zeros((b, c.n_objects, c.n_features), np.float32)
-            jax.block_until_ready(self.compiled_for(b)(jnp.asarray(x)))
+        return np.zeros((bucket, c.n_objects, c.n_features), np.float32)
 
-    # -- inference ----------------------------------------------------------
 
-    def _pad(self, x: np.ndarray, bucket: int) -> np.ndarray:
-        n = x.shape[0]
-        if n == bucket:
-            return x
-        return np.concatenate(
-            [x, np.zeros((bucket - n, *x.shape[1:]), x.dtype)], axis=0)
+class ServingEngine(ExecutionCore):
+    """Bucketed, sharded, metered inference over one forward path —
+    the trigger instantiation of the execution core."""
 
-    def infer(self, x, *, record: bool = True, sync: bool = True,
-              timeout_s: float | None = None):
-        """Classify ``x`` (n, N_o, P): pad to bucket, dispatch, slice back.
+    def __init__(self, params, cfg, *, forward: str = "fused_full",
+                 interpret: bool | None = None, mesh="auto",
+                 bucket_sizes=None, max_batch: int = 1024,
+                 metrics: ServingMetrics | None = None, injector=None):
+        super().__init__(
+            TriggerWorkload(params, cfg, forward=forward,
+                            interpret=interpret, mesh=mesh),
+            bucket_sizes=bucket_sizes, max_batch=max_batch,
+            metrics=metrics, injector=injector)
 
-        Requests larger than the top bucket are chunked through it; chunk
-        k+1's pad + dispatch overlaps chunk k's compute, with at most
-        :data:`MAX_INFLIGHT_CHUNKS` dispatches outstanding so an
-        arbitrarily large request keeps bounded device memory (the old
-        block-per-chunk loop pinned exactly one buffer; this pins a small
-        pipeline's worth).
+    # -- trigger-workload surface (historical engine API) -------------------
 
-        ``sync=True`` (default) blocks and returns the logits array;
-        ``sync=False`` returns a :class:`PendingResult` immediately after
-        dispatch, letting the caller (e.g. a batcher loop) overlap the
-        next flush with this one's in-flight compute.  Metrics are
-        recorded when the result is realized, never on dispatch.
-        ``timeout_s`` arms the realization watchdog (sync path only;
-        async callers pass it to ``PendingResult.result``).
-        """
-        x = np.asarray(x)
-        top = self.bucket_sizes[-1]
-        chunks = []
-        for i in range(0, x.shape[0], top):
-            if len(chunks) >= MAX_INFLIGHT_CHUNKS:
-                # throttle: wait for the oldest in-flight chunk before
-                # enqueueing more (its latency is still stamped at
-                # realization, where the wait is then a no-op)
-                jax.block_until_ready(chunks[-MAX_INFLIGHT_CHUNKS][0])
-            chunk = x[i:i + top]
-            n_valid = chunk.shape[0]
-            bucket = self.bucket_for(n_valid)
-            if self.injector is not None:
-                self.injector.check("dispatch", path=self.forward,
-                                    bucket=bucket)
-                chunk = self.injector.corrupt_input(
-                    chunk, path=self.forward, bucket=bucket)
-            fn = self.compiled_for(bucket)
-            t0 = time.perf_counter()
-            out = fn(jnp.asarray(self._pad(chunk, bucket)))   # async dispatch
-            if self.injector is not None:
-                out = self.injector.wrap_output(out, path=self.forward,
-                                                bucket=bucket)
-            chunks.append((out, n_valid, bucket, t0))
-        pending = PendingResult(self, chunks, record=record)
-        return pending.result(timeout_s=timeout_s) if sync else pending
+    @property
+    def spec(self):
+        return self.workload.spec
 
-    def run_plan(self, plan, *, sync: bool = True):
-        """Execute one :class:`~repro.serving.batcher.BatchPlan`; returns
-        ``{rid: (n_i, n_targets) logits}`` reassembled per request.
+    @property
+    def params(self):
+        return self.workload.params
 
-        ``sync=False`` returns a :class:`PendingPlan` right after
-        dispatch; realize it with ``.result()`` once the next plans are
-        in flight."""
-        pending = PendingPlan(self.infer(plan.x, sync=False), plan.requests)
-        return pending.result() if sync else pending
+    @property
+    def cfg(self):
+        return self.workload.cfg
 
-    def run_stream(self, stream, *, warmup: int = 2) -> dict:
-        """Pump a fixed-size batch stream through the double-buffered feed
-        loop (the trigger CLI's hot path).  All batches must share one
-        size; each is padded to its ladder bucket before dispatch."""
-        stream = list(stream)
-        if not stream:
-            return {"latencies": [], "events": 0, "wall_s": 0.0,
-                    "bucket": None, "kgps": float("nan")}
-        sizes = {b.shape[0] for b in stream}
-        if len(sizes) != 1:
-            raise ValueError(f"stream batches differ in size: {sorted(sizes)}")
-        n_valid = sizes.pop()
-        if n_valid > self.bucket_sizes[-1]:
-            raise ValueError(
-                f"stream batch size {n_valid} exceeds the top bucket "
-                f"{self.bucket_sizes[-1]}; build the engine with "
-                f"max_batch >= {n_valid} or chunk through infer()")
-        bucket = self.bucket_for(n_valid)
-        fwd = self.compiled_for(bucket)
-        padded = [self._pad(np.asarray(b), bucket) for b in stream]
-        lat, _, wall = serve_stream(fwd, padded, warmup=warmup)
-        # KGPS counts VALID events only — padding rows are not throughput.
-        events = n_valid * len(lat)
-        for t in lat:
-            self.metrics.record_batch(t, n_valid, bucket)
-        self.metrics.record_wall(wall, events)
-        return {"latencies": lat, "events": events, "wall_s": wall,
-                "bucket": bucket, "kgps": kgps(events, wall)}
+    @property
+    def forward(self) -> str:
+        return self.workload.name
+
+    @property
+    def interpret(self) -> bool:
+        return self.workload.interpret
+
+    @property
+    def mesh(self):
+        return self.workload.mesh
+
+    @property
+    def n_shards(self) -> int:
+        return self.workload.n_shards
+
+    def _build(self):
+        return self.workload.build()
 
     # -- roofline context ----------------------------------------------------
 

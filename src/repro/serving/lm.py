@@ -1,0 +1,368 @@
+"""LM continuous batching on the serving fabric: prefill + slot decode.
+
+The LM serving driver (``repro.launch.serve``) used to be a standalone
+script: its own compile caching (none — it re-traced prefill for every
+new prompt length), its own scheduling loop, no metrics, no deadlines,
+no fault seams.  This module re-plants it on the shared fabric
+(:mod:`repro.serving.core`), so the slot-recycling decode loop gets for
+free exactly what the trigger engine already has:
+
+* **bucketed prefill** — prompts are right-padded up a power-of-two
+  length ladder, so mixed-length requests share a handful of prefill
+  compilations instead of one trace per distinct prompt length.  With
+  causal attention the pad positions cannot influence positions before
+  them, so the spliced ``[:pl]`` cache slice and the ``pl - 1`` logits
+  row are exactly what the unpadded prefill would have produced.
+* **warm compile cache + fault seams** — prefill and decode callables
+  live in the :class:`~repro.serving.core.ExecutionCore` cache under
+  ``("lm", L)`` / ``("lm", "decode")`` keys; a
+  :class:`~repro.serving.faults.FaultInjector` can target the compile
+  and dispatch seams by ``path="lm"`` like any trigger path.
+* **metrics, deadlines, health** — decode steps land in the shared
+  :class:`~repro.serving.metrics.ServingMetrics` (per-step latency
+  percentiles, sustained tokens/s over the wall-union), queued requests
+  carry serve-by deadlines that shed instead of admitting late, and
+  ``health()`` reports the same state machine vocabulary as the trigger
+  tier (``healthy`` / ``shedding``) plus slot-occupancy gauges.
+
+Scheduling is IDENTICAL to the pre-fabric driver — admit free slots
+FIFO in slot order before each decode step, one token per active slot
+per step, retire at ``max_new`` and recycle the slot — so greedy token
+streams reproduce the old ``launch/serve.py`` output exactly
+(``tests/test_loop.py`` pins this).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.core import ExecutionCore, Workload
+from repro.serving.metrics import ServingMetrics
+
+
+@dataclasses.dataclass
+class LMRequest:
+    """One generation request: prompt in, greedy continuation out."""
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    t_deadline: float | None = None     # absolute admit-by time (clock base)
+    shed: bool = False
+
+
+def prompt_bucket_ladder(max_len: int, *, start: int = 16) -> list[int]:
+    """Power-of-two prompt-length ladder up to (and capped at) ``max_len``.
+
+    Same discipline as the trigger's batch ladder: any prompt length
+    pads up to the next rung, so L distinct lengths cost O(log L)
+    prefill compilations instead of L.
+    """
+    if max_len < 1:
+        raise ValueError(f"max_len must be >= 1, got {max_len}")
+    ladder, b = [], max(1, start)
+    while b < max_len:
+        ladder.append(b)
+        b *= 2
+    ladder.append(max_len)
+    return ladder
+
+
+class LMWorkload(Workload):
+    """Transformer prefill/decode as a fabric :class:`Workload`.
+
+    Buckets are PROMPT LENGTHS (ints) for prefill, plus the sentinel
+    ``"decode"`` for the slot-batched decode step — both flow through
+    :meth:`~repro.serving.core.ExecutionCore.compiled_for`'s cache and
+    compile fault seam under ``path="lm"``.
+    """
+
+    name = "lm"
+
+    def __init__(self, params, cfg, *, slots: int, max_seq: int):
+        from repro.models import transformer as tfm
+        self._tfm = tfm
+        self.params = params
+        self.cfg = cfg
+        self.slots = int(slots)
+        self.max_seq = int(max_seq)
+
+    def bucket_ladder(self, max_batch: int) -> list[int]:
+        # ``max_batch`` is the longest admissible prompt here
+        return prompt_bucket_ladder(min(max_batch, self.max_seq))
+
+    def cache_key(self, bucket) -> tuple:
+        c = self.cfg
+        return (self.name, bucket, c.n_layers, c.d_model, c.n_heads,
+                c.n_kv_heads, c.vocab_size, c.compute_dtype)
+
+    def build(self, bucket):
+        tfm, cfg = self._tfm, self.cfg
+        if bucket == "decode":
+            def dec(params, cache, toks):
+                return tfm.decode_step(params, cfg, cache, toks)
+            return jax.jit(functools.partial(dec, self.params))
+
+        def pre(params, toks):                     # prefill at padded length
+            return tfm.forward(params, cfg, toks, return_cache=True)
+        return jax.jit(functools.partial(pre, self.params))
+
+    def placeholder(self, bucket: int) -> np.ndarray:
+        return np.zeros((1, int(bucket)), np.int32)
+
+
+class LMEngine(ExecutionCore):
+    """Slot-recycling continuous-batching LM server on the fabric.
+
+    ``submit()`` enqueues requests; ``step()`` is one scheduler tick
+    (admit free slots, one batched decode step); ``run()`` drains to
+    completion.  The decode cache is batched over ``slots`` concurrent
+    requests; a finished request releases its slot to the next queued
+    one mid-stream (continuous batching), exactly as the pre-fabric
+    ``launch/serve.py`` loop did.
+    """
+
+    def __init__(self, params, cfg, *, slots: int = 4, max_seq: int = 128,
+                 prompt_buckets=None, metrics: ServingMetrics | None = None,
+                 injector=None, clock=time.monotonic):
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        super().__init__(
+            LMWorkload(params, cfg, slots=slots, max_seq=max_seq),
+            bucket_sizes=prompt_buckets, max_batch=max_seq,
+            metrics=metrics, injector=injector)
+        self._clock = clock
+        self.slots = int(slots)
+        self.max_seq = int(max_seq)
+        self.cache = self.workload._tfm.init_cache(cfg, slots, max_seq)
+        self.slot_req: list[LMRequest | None] = [None] * slots
+        self.queue: list[LMRequest] = []
+        self.done: list[LMRequest] = []
+        self._next_rid = 0
+        self._last_shed: float | None = None
+        self.shed_window_s = 5.0
+
+    # -- request flow -------------------------------------------------------
+
+    def submit(self, prompt, max_new: int, *,
+               deadline_s: float | None = None) -> LMRequest:
+        """Enqueue one request; it admits when a slot frees up.  With a
+        ``deadline_s`` budget the request is SHED (never admitted,
+        ``shed=True``, empty ``out``) if it is still queued past it."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.shape[0] < 1:
+            raise ValueError("empty prompt")
+        if prompt.shape[0] > self.max_seq:
+            raise ValueError(
+                f"prompt length {prompt.shape[0]} exceeds max_seq "
+                f"{self.max_seq}")
+        req = LMRequest(self._next_rid, prompt, int(max_new))
+        if deadline_s is not None:
+            req.t_deadline = self._clock() + deadline_s
+        self._next_rid += 1
+        self.queue.append(req)
+        self.metrics.incr("lm_requests")
+        self._update_gauges()
+        return req
+
+    def warm(self, buckets=None) -> None:
+        """Pre-compile the prefill ladder AND the decode step (against a
+        throwaway cache, so the live one is untouched)."""
+        super().warm(buckets)
+        throwaway = self.workload._tfm.init_cache(
+            self.workload.cfg, self.slots, self.max_seq)
+        toks = jnp.zeros((self.slots,), jnp.int32)
+        jax.block_until_ready(self.compiled_for("decode")(throwaway, toks))
+
+    def step(self) -> bool:
+        """One scheduler tick: admit free slots from the queue (shedding
+        expired requests), then one batched decode step.  Returns True
+        while work remains."""
+        now = self._clock()
+        for s in range(self.slots):
+            if self.slot_req[s] is not None:
+                continue
+            while self.queue:
+                req = self.queue.pop(0)
+                if req.t_deadline is not None and now >= req.t_deadline:
+                    self._shed(req)
+                    continue
+                self._admit(s, req)
+                break
+        if not any(r is not None for r in self.slot_req):
+            self._update_gauges()
+            return bool(self.queue)
+        if self.injector is not None:
+            self.injector.check("dispatch", path=self.workload.name,
+                                bucket="decode")
+        toks = jnp.asarray([
+            (self.slot_req[s].out[-1] if self.slot_req[s] else 0)
+            for s in range(self.slots)], jnp.int32)
+        decode = self.compiled_for("decode")
+        t0 = time.perf_counter()
+        logits, self.cache = decode(self.cache, toks)
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        t1 = time.perf_counter()
+        active = sum(1 for r in self.slot_req if r is not None)
+        self.metrics.record_batch(t1 - t0, active, self.slots)
+        self._record_wall_window(t0, t1, active)
+        self.metrics.incr("decode_steps")
+        self.metrics.incr("tokens_emitted", active)
+        for s in range(self.slots):
+            req = self.slot_req[s]
+            if req is None:
+                continue
+            req.out.append(int(nxt[s]))
+            if len(req.out) >= req.max_new:
+                self.done.append(req)
+                self.slot_req[s] = None           # release slot
+        self._update_gauges()
+        return bool(self.queue or any(r is not None for r in self.slot_req))
+
+    def run(self) -> dict:
+        """Drain the queue to completion; returns the serve report."""
+        t0 = time.perf_counter()
+        while self.step():
+            pass
+        dt = time.perf_counter() - t0
+        steps = self.metrics.counter("decode_steps")
+        return {
+            "done": sorted(self.done, key=lambda r: r.rid),
+            "steps": steps,
+            "wall_s": dt,
+            "steps_per_s": steps / dt if dt > 0 else float("nan"),
+            "shed": self.metrics.counter("lm_shed_requests"),
+            "prefill_compiles": sum(
+                1 for k in self._cache if k[1] != "decode"),
+            "snapshot": self.metrics.snapshot(),
+        }
+
+    # -- internals ----------------------------------------------------------
+
+    def _admit(self, slot: int, req: LMRequest) -> None:
+        """Prefill one request (padded up the prompt ladder) and splice
+        its ``[:pl]`` cache slice into the batch slot."""
+        pl = int(req.prompt.shape[0])
+        bucket = self.bucket_for(pl)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :pl] = req.prompt
+        prefill = self.compiled_for(bucket)
+        t0 = time.perf_counter()
+        logits, _, pc = prefill(jnp.asarray(toks))
+        # causal attention: positions < pl never see the pad tail, so
+        # this slice and the pl-1 logits row match the unpadded prefill
+        t = self.cache["k"].shape[2]
+        for key in ("k", "v"):
+            upd = jnp.zeros_like(self.cache[key][:, slot])
+            upd = upd.at[:, :pl].set(pc[key][:, 0, :pl])
+            self.cache[key] = self.cache[key].at[:, slot].set(upd)
+        sp = jnp.full((t,), -1, jnp.int32).at[:pl].set(jnp.arange(pl))
+        self.cache["slot_pos"] = self.cache["slot_pos"].at[slot].set(sp)
+        self.cache["pos"] = self.cache["pos"].at[slot].set(pl)
+        first = int(jnp.argmax(logits[0, pl - 1]))
+        t1 = time.perf_counter()
+        self.metrics.record_batch(t1 - t0, 1, bucket)
+        self._record_wall_window(t0, t1, 1)
+        self.metrics.incr("prefills")
+        self.metrics.incr("tokens_emitted")
+        req.out.append(first)
+        self.slot_req[slot] = req
+
+    def _shed(self, req: LMRequest) -> None:
+        req.shed = True
+        self.done.append(req)
+        self.metrics.incr("lm_shed_requests")
+        self._last_shed = self._clock()
+
+    def _update_gauges(self) -> None:
+        self.metrics.gauge("queue_depth", len(self.queue))
+        self.metrics.gauge(
+            "free_slots", sum(1 for r in self.slot_req if r is None))
+
+    # -- health -------------------------------------------------------------
+
+    def health(self) -> dict:
+        """Same vocabulary as the trigger tier's health report: a state
+        plus the counters/gauges it was derived from."""
+        now = self._clock()
+        shedding = (self._last_shed is not None
+                    and now - self._last_shed < self.shed_window_s)
+        return {
+            "state": "shedding" if shedding else "healthy",
+            "slots": self.slots,
+            "free_slots": sum(1 for r in self.slot_req if r is None),
+            "queue_depth": len(self.queue),
+            "counters": self.metrics.counters,
+            "gauges": self.metrics.gauges,
+        }
+
+
+# -- CLI driver (the thin repro.launch.serve front-end calls this) ----------
+
+
+def tiny_config(cfg):
+    """Shrink an arch config to a 2-layer miniature (same code path)."""
+    return dataclasses.replace(
+        cfg, n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab_size=512, compute_dtype="float32", remat="none")
+
+
+def build_lm_cli(ap) -> None:
+    """Install the LM serve arguments on an ``argparse`` parser."""
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request admit-by budget; late requests shed")
+    ap.add_argument("--health", action="store_true",
+                    help="print the engine health report after the drain")
+
+
+def run_lm_cli(args) -> dict:
+    """Serve ``--requests`` synthetic prompts through :class:`LMEngine`
+    and print the classic ``[serve]`` report (token streams unchanged
+    from the pre-fabric driver)."""
+    from repro.configs.registry import get_arch
+
+    arch = get_arch(args.arch)
+    assert arch.family == "lm", "serve driver is for LM archs"
+    cfg = tiny_config(arch.model) if args.tiny else arch.model
+
+    rng = np.random.RandomState(0)
+    from repro.models import transformer as tfm
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    v = cfg.vocab_size
+
+    engine = LMEngine(params, cfg, slots=args.slots, max_seq=args.max_seq)
+    deadline_s = (args.deadline_ms * 1e-3
+                  if args.deadline_ms is not None else None)
+    for _ in range(args.requests):
+        engine.submit(rng.randint(0, v, args.prompt_len), args.max_new,
+                      deadline_s=deadline_s)
+    report = engine.run()
+
+    done = [r for r in report["done"] if not r.shed]
+    print(f"[serve] {len(done)} requests, {report['steps']} decode steps, "
+          f"{report['steps_per_s']:.1f} steps/s")
+    print(f"[serve] prefill compiles: {report['prefill_compiles']}  "
+          f"prompt buckets: {engine.bucket_sizes}  "
+          f"shed: {report['shed']}")
+    for r in done[:4]:
+        print(f"  req {r.rid}: {r.out[:8]}...")
+    if args.health:
+        h = engine.health()
+        print(f"[health] state={h['state']} free_slots={h['free_slots']} "
+              f"queue_depth={h['queue_depth']}")
+        for name in sorted(h["counters"]):
+            print(f"  counter {name}={h['counters'][name]}")
+    return report

@@ -16,6 +16,13 @@ numbers the same way:
   COUNTERS (:meth:`ServingMetrics.incr`) — the health state machine
   (:mod:`repro.serving.resilient`) and ``trigger_serve --health`` read
   them off the same snapshot as the latency percentiles.
+* instantaneous levels (queue depth, in-flight dispatches, free decode
+  slots, ...) land in GAUGES (:meth:`ServingMetrics.gauge`) — set, not
+  summed — so the event loop and the LM slot scheduler surface their
+  current occupancy in the same ``snapshot()`` / ``--health`` report as
+  the monotonic counters; each gauge also remembers its high-water mark
+  (``<name>_max``), which is what backlog tests and capacity planning
+  actually read.
 """
 
 from __future__ import annotations
@@ -54,6 +61,8 @@ class ServingMetrics:
         self._wall_s = 0.0       # accumulated post-warmup stream wall time
         self._wall_events = 0    # valid events covered by _wall_s
         self._counters: collections.Counter[str] = collections.Counter()
+        self._gauges: dict[str, float] = {}
+        self._gauge_peaks: dict[str, float] = {}
 
     def record_batch(self, latency_s: float, events: int, bucket: int) -> None:
         self._records.append(BatchRecord(latency_s, events, bucket))
@@ -70,6 +79,29 @@ class ServingMetrics:
     def counters(self) -> dict:
         """Copy of all non-zero counters (stable for snapshotting)."""
         return {k: v for k, v in sorted(self._counters.items()) if v}
+
+    def gauge(self, name: str, value: float) -> None:
+        """Set an instantaneous level (queue depth, inflight count, free
+        slots, ...).  Unlike :meth:`incr` the value REPLACES the previous
+        one; the high-water mark is tracked alongside as ``<name>_max``."""
+        value = float(value)
+        self._gauges[name] = value
+        peak = self._gauge_peaks.get(name)
+        if peak is None or value > peak:
+            self._gauge_peaks[name] = value
+
+    def gauge_value(self, name: str, default: float = 0.0) -> float:
+        return self._gauges.get(name, default)
+
+    def gauge_max(self, name: str, default: float = 0.0) -> float:
+        """High-water mark of ``name`` since this metrics object was
+        created (backlog tests / capacity planning read this)."""
+        return self._gauge_peaks.get(name, default)
+
+    @property
+    def gauges(self) -> dict:
+        """Copy of the current gauge levels (stable for snapshotting)."""
+        return dict(sorted(self._gauges.items()))
 
     def record_wall(self, wall_s: float, events: int) -> None:
         """Fold a measured stream segment into the sustained-KGPS estimate."""
@@ -104,4 +136,5 @@ class ServingMetrics:
             "kgps": kgps(self._wall_events, self._wall_s),
             "buckets": sorted({r.bucket for r in self._records}),
             "counters": self.counters,
+            "gauges": self.gauges,
         }

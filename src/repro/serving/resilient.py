@@ -107,6 +107,39 @@ class ResilientPending:
         return self._out
 
 
+class ResilientPlan:
+    """A dispatched :class:`~repro.serving.batcher.BatchPlan` with
+    deadline shedding already applied at dispatch: ``result()``
+    reassembles ``{rid: logits | None}`` (``None`` marks a shed
+    request), recovering down-ladder like any other realization.  The
+    event loop (:mod:`repro.serving.loop`) holds these as its bounded
+    in-flight window."""
+
+    def __init__(self, results: dict, keep, pending):
+        self._results = results          # pre-seeded with shed rids -> None
+        self._keep = keep                # ((rid, start, stop), ...) served
+        self._pending = pending          # ResilientPending | None
+
+    @property
+    def ready(self) -> bool:
+        return self._pending is None or self._pending.ready
+
+    def result(self) -> dict:
+        if self._pending is not None:
+            logits = self._pending.result()      # never raises
+            parts: dict[int, list] = {}
+            pos = 0
+            for rid, start, stop in self._keep:
+                n = stop - start
+                parts.setdefault(rid, []).append(logits[pos:pos + n])
+                pos += n
+            for rid, ps in parts.items():
+                self._results[rid] = np.concatenate(ps, axis=0)
+            self._pending = None
+            self._keep = ()
+        return self._results
+
+
 class ResilientEngine:
     """Never-raise serving over a forward path's degradation ladder."""
 
@@ -238,7 +271,8 @@ class ResilientEngine:
         return {"state": state, "chain": list(self.chain),
                 "base_path": self.chain[self._base_level],
                 "buckets": buckets, "inflight": len(self._inflight),
-                "counters": self.metrics.counters}
+                "counters": self.metrics.counters,
+                "gauges": self.metrics.gauges}
 
     # -- rung management -----------------------------------------------------
 
@@ -365,6 +399,9 @@ class ResilientEngine:
         self.metrics.incr("shed_events", n_events)
         self._last_shed = self._clock()
 
+    def _gauge_inflight(self) -> None:
+        self.metrics.gauge("inflight", len(self._inflight))
+
     def warm(self, buckets=None) -> None:
         """Pre-serve zeros through every bucket — compile cost (and any
         compile-time demotion) paid before traffic arrives."""
@@ -424,6 +461,7 @@ class ResilientEngine:
             return rp
         rp = ResilientPending(self, x, bucket, lvl, pending, record)
         self._inflight.append(rp)
+        self._gauge_inflight()
         return rp
 
     def _realize(self, rp: ResilientPending, pending, x, bucket: int,
@@ -443,38 +481,33 @@ class ResilientEngine:
             self._rung_served(st, level)
         if rp in self._inflight:
             self._inflight.remove(rp)
+            self._gauge_inflight()
         return out
 
     def run_plan(self, plan, *, sync: bool = True):
         """Execute a :class:`~repro.serving.batcher.BatchPlan`, shedding
         segments whose deadline has already expired (they are never
         dispatched); returns ``{rid: logits | None}`` — ``None`` marks a
-        shed request."""
+        shed request.
+
+        ``sync=False`` returns a :class:`ResilientPlan` right after the
+        async dispatch — the event loop's unit of in-flight work: the
+        next plan's pad + dispatch overlaps this one's compute, and
+        realization-time faults still recover down the ladder."""
         now = self._clock()
-        keep, shed_rids = [], []
+        keep, results = [], {}
         for i, (rid, start, stop) in enumerate(plan.requests):
             t_deadline = plan.deadline_for(i)
             if t_deadline is not None and now >= t_deadline:
                 self._shed(stop - start)
-                shed_rids.append(rid)
+                results[rid] = None
             else:
                 keep.append((rid, start, stop))
-        results: dict = {rid: None for rid in shed_rids}
         if not keep:
-            return results
+            return results if sync else ResilientPlan(results, (), None)
         x = np.concatenate([plan.x[s:e] for _, s, e in keep], axis=0)
-        if sync:
-            logits = self.infer(x)
-        else:
-            # callers wanting overlap realize via the returned handle;
-            # keep sync reassembly simple here
-            logits = self.infer(x, sync=False).result()
-        pos = 0
-        for rid, start, stop in keep:
-            n = stop - start
-            results[rid] = logits[pos:pos + n]
-            pos += n
-        return results
+        rp = ResilientPlan(results, tuple(keep), self.infer(x, sync=False))
+        return rp.result() if sync else rp
 
     def run_stream(self, stream, *, warmup: int = 2) -> dict:
         """The double-buffered fixed-size stream loop, ladder-protected:

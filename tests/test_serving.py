@@ -271,6 +271,21 @@ def test_metrics_empty_snapshot_is_nan_not_crash():
     snap = ServingMetrics().snapshot()
     assert snap["batches"] == 0 and snap["events"] == 0
     assert np.isnan(snap["p50_us"]) and np.isnan(snap["kgps"])
+    assert snap["gauges"] == {}
+
+
+def test_metrics_gauges_replace_and_track_peak():
+    m = ServingMetrics()
+    m.gauge("queue_depth", 3)
+    m.gauge("queue_depth", 7)
+    m.gauge("queue_depth", 1)           # gauges REPLACE, unlike counters
+    assert m.gauge_value("queue_depth") == 1
+    assert m.gauge_max("queue_depth") == 7
+    assert m.gauge_value("missing", default=-1.0) == -1.0
+    assert m.gauge_max("missing") == 0.0
+    m.gauge("inflight", 2)
+    snap = m.snapshot()
+    assert snap["gauges"] == {"inflight": 2.0, "queue_depth": 1.0}
 
 
 # -- sharded path (subprocess with 8 fake CPU devices) -------------------
