@@ -39,6 +39,7 @@ from repro.core import codesign, paths
 from repro.core import interaction_net as inet
 from repro.data.jets import make_tracks
 from repro.kernels.fused_jedinet import autotune as fj_autotune
+from repro.kernels.jedi_linear import autotune as jl_autotune
 
 # filled by run(); benchmarks/run.py serializes it to BENCH_fused.json
 JSON_PAYLOAD: dict = {}
@@ -74,6 +75,21 @@ def _widths(params):
     return (fj_autotune.mlp_widths(params["fr"]),
             fj_autotune.mlp_widths(params["fo"]),
             fj_autotune.mlp_widths(params["phi"]))
+
+
+def _linear_tiling(cfg, params, batch: int) -> dict:
+    """Batch tile + per-sample live set under the LINEAR model — the
+    O(N) kernel has no sender axis, so the grid autotuner's
+    (block_b, block_s) numbers do not describe it."""
+    fr_w, fo_w, phi_w = _widths(params)
+    return {
+        "autotuned_block_b": jl_autotune.pick_block_b_linear(
+            batch, cfg.n_objects, cfg.n_features, fr_w, fo_w, phi_w,
+            reserved_bytes=jl_autotune.weight_vmem_bytes(
+                params, cfg.compute_dtype)),
+        "linear_per_sample_bytes": jl_autotune.linear_forward_bytes_per_sample(
+            cfg.n_objects, cfg.n_features, fr_w, fo_w, phi_w),
+    }
 
 
 def _tiling(cfg, params, batch: int) -> dict:
@@ -136,12 +152,18 @@ def run():
             derived = (f"level={spec.fused_level} "
                        f"modeled_hbm={hbm / 1e6:.2f}MB err={err:.1e}")
             if spec.pallas and spec.fused_level == "full":
-                tiling = _tiling(cfg, pparams, batch)
-                entry["paths"][name].update(tiling)
-                derived += (f" block_b={tiling['autotuned_block_b']}"
-                            f"(x{tiling['block_b_gain']:.1f} vs untiled "
-                            f"{tiling['untiled_block_b']})"
-                            f" block_s={tiling['autotuned_block_s']}")
+                if spec.complexity == "O(N)":
+                    tiling = _linear_tiling(cfg, pparams, batch)
+                    entry["paths"][name].update(tiling)
+                    derived += (f" block_b={tiling['autotuned_block_b']} "
+                                "(linear live set, no sender axis)")
+                else:
+                    tiling = _tiling(cfg, pparams, batch)
+                    entry["paths"][name].update(tiling)
+                    derived += (f" block_b={tiling['autotuned_block_b']}"
+                                f"(x{tiling['block_b_gain']:.1f} vs untiled "
+                                f"{tiling['untiled_block_b']})"
+                                f" block_s={tiling['autotuned_block_s']}")
             rows.append(row(
                 f"fused_paths_{cname}_{name}", us,
                 derived + (" (interpret)" if interpret else "")))
@@ -184,6 +206,31 @@ def run():
         f"N_o={large_cfg.n_objects} untiled_rejected="
         f"{tiling['untiled_rejected']} block_b={tiling['autotuned_block_b']} "
         f"block_s={tiling['autotuned_block_s']} err={err:.1e}"
+        + ("" if on_tpu else " (interpret)")))
+
+    # head-to-head: the O(N) JEDI-linear kernel in the SAME regime.  128
+    # tracks is deep into its scaling win (the f_R grid the fused_full
+    # kernel tiles over simply does not exist), so this pair of entries
+    # is the measured N_o-scaling crossover record for EXPERIMENTS.md
+    # §JEDI-linear.  Different model — its own ref/err, not comparable
+    # accuracy-wise, explicitly comparable wall-clock-wise.
+    jspec = paths.get("jedi_linear_full")
+    jus = _measure(jspec, lparams, large_cfg, x, not on_tpu)
+    jfwd = jspec.forward(lparams, large_cfg, xq, interpret=not on_tpu)
+    jerr = float(jnp.max(jnp.abs(jfwd - jspec.ref(lparams, large_cfg, xq))))
+    jhbm = jspec.roofline_for(large_cfg, [model_batch])[model_batch][
+        "hbm_bytes"]
+    jtiling = _linear_tiling(large_cfg, lparams, model_batch)
+    payload["configs"]["tracks128"]["paths"]["jedi_linear_full_large"] = {
+        **_entry(jspec, jus, lbatch, not on_tpu, jhbm, model_batch, jerr),
+        **jtiling,
+        "speedup_vs_fused_full": us / jus,
+    }
+    rows.append(row(
+        "jedi_linear_full_large", jus,
+        f"N_o={large_cfg.n_objects} O(N) "
+        f"block_b={jtiling['autotuned_block_b']} err={jerr:.1e} "
+        f"speedup_vs_fused_full={us / jus:.1f}x"
         + ("" if on_tpu else " (interpret)")))
 
     JSON_PAYLOAD.clear()

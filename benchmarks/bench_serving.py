@@ -35,10 +35,12 @@ from repro.serving import ResilientEngine, ServingLoop
 JSON_NAME = "BENCH_serving.json"
 JSON_PAYLOAD: dict = {}
 
-# default subset: the XLA production fallback + the whole-network kernel
-# (off-TPU interpret emulation is slow; `benchmarks.run --paths all`
-# widens this to every registered path, e.g. for a TPU baseline run)
-PATHS = ("sr_split", "fused_full")
+# default subset: the XLA production fallback, the whole-network kernel
+# and its O(N) JEDI-linear rival — the head-to-head the serving tier
+# tracks across PRs (off-TPU interpret emulation is slow;
+# `benchmarks.run --paths all` widens this to every registered path,
+# e.g. for a TPU baseline run)
+PATHS = ("sr_split", "fused_full", "jedi_linear_full")
 
 
 def _bench_engine(cfg, params, path, *, on_tpu):

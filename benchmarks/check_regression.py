@@ -24,16 +24,30 @@ truth" per EXPERIMENTS.md) get ``--interpret-slack`` (default 2x) on
 top of the threshold: their pure-Python wall-clocks track neither BLAS
 nor XLA yardsticks.  New paths/buckets (no baseline yet) and removed
 ones are reported but never fail the gate — growth is not a
-regression.  Passing ``--bootstrap`` (env ``BENCH_BOOTSTRAP=1``) goes
-one further: entries a fresh run has but the committed baseline lacks
-— e.g. a path newly registered in the forward-path registry — are
-merged INTO the baseline file, speed-normalized to the baseline
-machine's calibration, so the very next run gates them; commit the
-updated BENCH_*.json in the same PR that adds the path.  A baseline
-FILE missing entirely (or unparseable) is a gate FAILURE with the
-bootstrap recipe printed — a silently green gate would hide real
-regressions forever.  KGPS drops are reported as warnings only (KGPS
-is the inverse of a wall-clock already gated).
+regression, but unseeded entries are named explicitly (with the exact
+bootstrap command) so they cannot linger ungated.  Passing
+``--bootstrap`` (env ``BENCH_BOOTSTRAP=1``) goes one further: entries
+a fresh run has but the committed baseline lacks — e.g. a path newly
+registered in the forward-path registry — are merged INTO the baseline
+file, speed-normalized to the baseline machine's calibration, so the
+very next run gates them; commit the updated BENCH_*.json in the same
+PR that adds the path.  A baseline FILE missing entirely (or
+unparseable) is a gate FAILURE with the bootstrap recipe printed,
+naming the fresh paths that need seeding — a silently green gate would
+hide real regressions forever.  KGPS drops are reported as warnings
+only (KGPS is the inverse of a wall-clock already gated).
+
+Introducing a path (or several at once, e.g. the jedi_linear family)
+touches BOTH files in ONE pass: produce the fresh payloads in a single
+quiet window (`PYTHONPATH=src python -m benchmarks.run --only
+fused_paths,serving --out-dir bench_out` — serialized, nothing else
+running, so the shared calibration stamp is honest for every new
+entry), then `python benchmarks/check_regression.py --fresh-dir
+bench_out --bootstrap` seeds the new entries into BENCH_fused.json AND
+BENCH_serving.json together and the next run gates them.  Never seed
+the two files from different windows: their calibrations would
+disagree about machine speed and the first gated run would see a
+phantom regression on one of them.
 
 Intentional baseline refresh: regenerate the committed files with
 
@@ -149,13 +163,15 @@ def bootstrap_new_entries(fresh, base, scale) -> list:
 def compare(fresh, base, iterate, metrics, max_regress, *, scale=1.0,
             interpret_slack=1.0, warn_metric=None,
             warn_higher_is_better=False):
-    """Returns (failures, warnings, infos) line lists.
+    """Returns (failures, warnings, infos, new_keys) line lists.
 
     ``metrics`` is a preference list; the first key present in BOTH
     entries is gated.  Fresh values are divided by ``scale`` (the
-    machine-speed ratio) before comparing.
+    machine-speed ratio) before comparing.  ``new_keys`` are entries
+    the fresh run has but the baseline lacks — the caller prints the
+    bootstrap recipe naming them so a new path never lingers ungated.
     """
-    failures, warnings, infos = [], [], []
+    failures, warnings, infos, new_keys = [], [], [], []
     fresh_e = dict(iterate(fresh))
     base_e = dict(iterate(base))
     for key in sorted(set(fresh_e) | set(base_e)):
@@ -166,6 +182,7 @@ def compare(fresh, base, iterate, metrics, max_regress, *, scale=1.0,
         if b is None:
             infos.append(f"{key}: new (no baseline; --bootstrap seeds it) "
                          f"{metrics[0]}={f.get(metrics[0], float('nan')):.2f}")
+            new_keys.append(key)
             continue
         if f.get("interpret") != b.get("interpret"):
             infos.append(f"{key}: interpret flag changed — not compared")
@@ -194,7 +211,7 @@ def compare(fresh, base, iterate, metrics, max_regress, *, scale=1.0,
                 warnings.append(
                     f"{key}: {warn_metric} {b[warn_metric]:.2f} -> "
                     f"{f[warn_metric]:.2f}")
-    return failures, warnings, infos
+    return failures, warnings, infos, new_keys
 
 
 def main(argv=None) -> int:
@@ -236,9 +253,16 @@ def main(argv=None) -> int:
                       "from the fresh run; commit it")
             else:
                 # a silently green gate on a missing baseline hides real
-                # regressions forever — fail with the bootstrap recipe
+                # regressions forever — fail with the bootstrap recipe,
+                # naming the fresh entries that need their first baseline
+                iterate = _iter_fused if name == "BENCH_fused.json" \
+                    else _iter_serving
+                fresh_keys = sorted(k for k, _ in iterate(fresh))
+                listing = ", ".join(fresh_keys) if fresh_keys \
+                    else "(fresh file has no entries)"
                 print(f"  FAIL: no committed baseline at {base_path}.\n"
-                      "  Bootstrap one from this fresh run with\n"
+                      f"  Unseeded entries: {listing}\n"
+                      "  Bootstrap them from this fresh run with\n"
                       "      python benchmarks/check_regression.py "
                       f"--fresh-dir {args.fresh_dir} --bootstrap\n"
                       "  (or BENCH_BOOTSTRAP=1) and commit the written "
@@ -254,11 +278,11 @@ def main(argv=None) -> int:
         print(f"  machine-speed scale: {scale:.2f}x "
               f"(fresh/baseline calibration)")
         if name == "BENCH_fused.json":
-            fails, warns, infos = compare(
+            fails, warns, infos, new = compare(
                 fresh, base, _iter_fused, ["wall_us"], args.max_regress,
                 scale=scale, interpret_slack=args.interpret_slack)
         else:
-            fails, warns, infos = compare(
+            fails, warns, infos, new = compare(
                 fresh, base, _iter_serving,
                 ["per_event_min_us", "per_event_p50_us"], args.max_regress,
                 scale=scale, interpret_slack=args.interpret_slack,
@@ -279,6 +303,15 @@ def main(argv=None) -> int:
                       f"{'y' if len(added) == 1 else 'ies'} into "
                       f"{base_path} (speed-normalized): "
                       f"{', '.join(added)} — commit this file")
+        elif new:
+            # name the unseeded entries + the exact command: a newly
+            # introduced path must not linger ungated behind an info line
+            print(f"  NOTE: {len(new)} entr{'y' if len(new) == 1 else 'ies'} "
+                  f"without a committed baseline: {', '.join(new)}\n"
+                  "  Seed them (fresh files from ONE quiet window) with\n"
+                  "      python benchmarks/check_regression.py "
+                  f"--fresh-dir {args.fresh_dir} --bootstrap\n"
+                  "  and commit the updated baseline file(s).")
 
     if all_failures:
         print(f"\n{len(all_failures)} perf regression(s) "

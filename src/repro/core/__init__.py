@@ -16,7 +16,6 @@ from repro.core.interaction_net import (
     build_b_matrix,
     aggregate_incoming,
     loss_fn,
-    FORWARD_FNS,
 )
 from repro.core import codesign, paths
 
@@ -24,5 +23,5 @@ __all__ = [
     "edge_index_maps", "sender_index_matrix", "dense_relation_matrices",
     "mmm_op_counts", "JediNetConfig", "init", "forward_dense", "forward_sr",
     "forward_fused", "build_b_matrix", "aggregate_incoming", "loss_fn",
-    "FORWARD_FNS", "codesign", "paths",
+    "codesign", "paths",
 ]

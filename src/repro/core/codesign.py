@@ -146,6 +146,8 @@ class TPUModel:
         f += cfg.d_e * n_e
         return f * batch
 
+    # O(N) paths override this via PathSpec.flops_model = jedi_linear_flops.
+
     @staticmethod
     def hbm_bytes(cfg: JediNetConfig, batch: int, compute_bytes: int,
                   level: str = "edge", *,
@@ -194,8 +196,14 @@ class TPUModel:
 
     @classmethod
     def evaluate(cls, pt: TPUDesignPoint, level: str = "edge", *,
-                 weight_bytes: int | None = None) -> dict:
-        fl = cls.flops(pt.cfg, pt.batch)
+                 weight_bytes: int | None = None,
+                 flops_fn: Callable | None = None) -> dict:
+        """``flops_fn`` — per-path FLOPs model ``(cfg, batch) -> float``
+        (``PathSpec.flops_model``); ``None`` uses the dense edge-grid
+        :meth:`flops`.  O(N) paths plug in :func:`jedi_linear_flops` so
+        the compute term of the roofline matches their algorithmic
+        class — at N_o=128 the two differ by ~40x."""
+        fl = (flops_fn or cls.flops)(pt.cfg, pt.batch)
         by = cls.hbm_bytes(pt.cfg, pt.batch, pt.compute_bytes, level,
                            weight_bytes=weight_bytes)
         t_c = fl / (pt.chips * TPU_V5E_BF16_FLOPS)
@@ -214,9 +222,39 @@ class TPUModel:
         }
 
 
+def jedi_linear_flops(cfg: JediNetConfig, batch: int) -> float:
+    """FLOPs of one batched JEDI-linear forward (O(N_o) aggregation).
+
+    The pooled identity (``kernels/jedi_linear/ref.py``) moves the
+    sender sum in front of f_R's first nonlinearity, so EVERY f_R layer
+    runs over N_o node rows instead of N_E = N_o(N_o-1) edge rows — the
+    first-layer GEMM cost is unchanged (the split halves sum to one
+    (2P x H1) projection over N_o rows) and the pool + recombination
+    add only ~4 N_o H1 elementwise ops.  f_O / phi_O are identical to
+    the dense model.  The per-path FLOPs hook of the jedi_linear specs
+    (``PathSpec.flops_model``).
+    """
+    from repro.nn.core import mlp_dims
+    n_o = cfg.n_objects
+    f = 0.0
+    for din, dout in mlp_dims(2 * cfg.n_features, list(cfg.fr_hidden),
+                              cfg.d_e):
+        f += 2.0 * n_o * din * dout
+    for din, dout in mlp_dims(cfg.n_features + cfg.d_e, list(cfg.fo_hidden),
+                              cfg.d_o):
+        f += 2.0 * n_o * din * dout
+    for din, dout in mlp_dims(cfg.d_o, list(cfg.phi_hidden), cfg.n_targets):
+        f += 2.0 * din * dout
+    # sender pool + (N_o-1)-recombination: ~4 elementwise ops per (node, H1)
+    h1 = (list(cfg.fr_hidden) + [cfg.d_e])[0]
+    f += 4.0 * n_o * h1
+    return f * batch
+
+
 def bucket_roofline(cfg: JediNetConfig, buckets, *, level: str = "full",
                     compute_bytes: int = 2, chips: int = 1,
-                    weight_bytes: int | None = None) -> dict:
+                    weight_bytes: int | None = None,
+                    flops_fn: Callable | None = None) -> dict:
     """TPUModel roofline per serving bucket size.
 
     The batcher pads requests up to ladder buckets, so the question "what
@@ -226,16 +264,17 @@ def bucket_roofline(cfg: JediNetConfig, buckets, *, level: str = "full",
     compute-bound.  Returns ``{bucket: evaluate() dict + per_event_us}``;
     the crossover is where the deadline/throughput trade-off lives.
 
-    ``level`` / ``weight_bytes`` normally come off a
+    ``level`` / ``weight_bytes`` / ``flops_fn`` normally come off a
     :class:`~repro.core.paths.PathSpec` (``spec.roofline_for`` wraps
-    this fn) so the model always matches what the path actually fuses.
+    this fn) so the model always matches what the path actually fuses —
+    and, via the per-path FLOPs hook, its algorithmic class.
     """
     out = {}
     for b in buckets:
         m = TPUModel.evaluate(
             TPUDesignPoint(cfg=cfg, batch=int(b), chips=chips,
                            compute_bytes=compute_bytes), level,
-            weight_bytes=weight_bytes)
+            weight_bytes=weight_bytes, flops_fn=flops_fn)
         m["per_event_us"] = m["step_us"] / int(b)
         out[int(b)] = m
     return out

@@ -30,8 +30,6 @@ is exposed through the dense baseline for fidelity.
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from collections.abc import Mapping
 from typing import Sequence
 
 import jax
@@ -307,49 +305,6 @@ paths.register(paths.PathSpec(
     name="fused_full", forward=forward_fused_full, ref=forward_sr,
     fused_level="full", pallas=True, tolerance=5e-4, fallback="sr_split",
     description="whole-network Pallas kernel: x -> logits on-chip"))
-
-
-class _ForwardFnsView(Mapping):
-    """Deprecated dict-shaped view of the path registry.
-
-    The seed API exposed forward paths as a flat ``FORWARD_FNS`` dict;
-    the registry (:mod:`repro.core.paths`) is the source of truth now.
-    This live view keeps ``FORWARD_FNS[name]`` / ``in`` / iteration
-    working — including for paths registered after import — while
-    nudging callers to the registry.
-    """
-
-    def __getitem__(self, name):
-        warnings.warn(
-            "FORWARD_FNS is deprecated; use repro.core.paths.get(name) "
-            "for the full PathSpec", DeprecationWarning, stacklevel=2)
-        try:
-            spec = paths.get(name)
-        except ValueError:
-            # dict semantics: Mapping.__contains__/.get() expect KeyError
-            raise KeyError(name) from None
-        if spec.transform_params is None:
-            return spec.forward           # seed identity preserved
-        # the seed dict contract is "callable on raw init() params", so
-        # transform-requiring paths get the hook folded in (per call —
-        # acceptable for a deprecated view; bind via the registry to
-        # transform once)
-        def call(params, cfg, x, *args, **kw):
-            return spec.forward(spec.prepare_params(params), cfg, x,
-                                *args, **kw)
-        return call
-
-    def __iter__(self):
-        return iter(paths.available())
-
-    def __len__(self):
-        return len(paths.available())
-
-    def __repr__(self):
-        return f"FORWARD_FNS({', '.join(paths.available())})"
-
-
-FORWARD_FNS = _ForwardFnsView()
 
 
 def loss_fn(params, cfg: JediNetConfig, batch, *, forward: str = "sr"):

@@ -23,9 +23,10 @@ edits::
 
 ``paths.available()`` / ``paths.get(name)`` are the only lookups any
 consumer performs; tag filters (``available(quantized=True)``,
-``available(pallas=True)``) answer capability queries.  The legacy
-``interaction_net.FORWARD_FNS`` dict survives as a thin deprecated
-read-only view over this registry.
+``available(pallas=True)``, ``available(complexity="O(N)")``) answer
+capability queries.  This registry IS the forward-path API: the
+pre-registry surfaces (a flat forward-fn dict, lazy path-name
+snapshots) are gone, and a repo-hygiene test keeps them gone.
 
 Built-in paths live in the modules listed in :data:`_BUILTIN_MODULES`;
 they are imported lazily on first registry access so importing
@@ -42,6 +43,13 @@ from typing import Any, Callable, Sequence
 #: ``codesign.TPUModel.hbm_bytes``): "none" round-trips B/E through HBM,
 #: "edge" keeps them in VMEM, "full" keeps every intermediate on-chip.
 FUSED_LEVELS = ("none", "edge", "full")
+
+#: Algorithmic complexity classes in N_o (the aggregation strategy):
+#: "O(N^2)" — the dense pairwise edge grid; "O(N)" — JEDI-linear
+#: globally-pooled aggregation.  A validated vocabulary (not free text)
+#: so ``available(complexity="O(N)")`` can never silently miss a typo'd
+#: registration.
+COMPLEXITY_CLASSES = ("O(N^2)", "O(N)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +76,8 @@ class PathSpec:
     weight_bytes: int | None = None         # roofline weight precision override
     per_sample_bytes: Callable | None = None   # (cfg, params) -> VMEM bytes/jet
     fallback: str | None = None             # degrade-to path (see fallback_chain)
+    complexity: str = "O(N^2)"              # aggregation class (COMPLEXITY_CLASSES)
+    flops_model: Callable | None = None     # (cfg, batch) -> FLOPs of one step
     description: str = ""
 
     def __post_init__(self):
@@ -75,6 +85,10 @@ class PathSpec:
             raise ValueError(
                 f"path {self.name!r}: fused_level {self.fused_level!r} "
                 f"not in {FUSED_LEVELS}")
+        if self.complexity not in COMPLEXITY_CLASSES:
+            raise ValueError(
+                f"path {self.name!r}: complexity {self.complexity!r} "
+                f"not in {COMPLEXITY_CLASSES}")
 
     # -- hooks with defaults -------------------------------------------------
 
@@ -129,15 +143,28 @@ class PathSpec:
             max_batch, self.bucket_bytes(cfg, params),
             reserved_bytes=self.reserved_vmem_bytes(cfg, params), **kw)
 
+    def flops_for(self, cfg, batch: int) -> float:
+        """Modeled FLOPs of one batched forward step through this path.
+
+        The per-path FLOPs hook: O(N) paths plug in their own model
+        (``codesign.jedi_linear_flops``) so codesign/roofline reason
+        about the algorithmic class, not just bytes; the default is the
+        dense edge-grid model (``codesign.TPUModel.flops``)."""
+        if self.flops_model is not None:
+            return float(self.flops_model(cfg, batch))
+        from repro.core import codesign
+        return float(codesign.TPUModel.flops(cfg, batch))
+
     def roofline_for(self, cfg, buckets, *, compute_bytes: int = 2,
                      chips: int = 1) -> dict:
         """TPUModel roofline per bucket at this path's declared level
-        (and weight precision, for quantized paths)."""
+        (and weight precision / FLOPs model, for quantized and O(N)
+        paths)."""
         from repro.core import codesign
         return codesign.bucket_roofline(
             cfg, buckets, level=self.fused_level,
             compute_bytes=compute_bytes, chips=chips,
-            weight_bytes=self.weight_bytes)
+            weight_bytes=self.weight_bytes, flops_fn=self.flops_model)
 
 
 # ---------------------------------------------------------------------------
@@ -152,6 +179,7 @@ _REGISTRY: dict[str, PathSpec] = {}
 _BUILTIN_MODULES = (
     "repro.core.interaction_net",
     "repro.core.int8_path",
+    "repro.core.jedi_linear_path",
 )
 _builtins_state = "pending"           # "pending" -> "loading" -> "done"
 
@@ -281,8 +309,9 @@ def describe(names: Sequence[str] | None = None, *, cfg=None, params=None,
     deeper ladder than its fp32 twin.
     """
     rows = [get(n) for n in (names if names is not None else available())]
-    lines = [f"{'path':<16} {'level':<5} {'kernel':<7} {'dtypes':<18} "
-             f"{'wB':<3} {'tol':<7} {'fallback chain':<34} description"]
+    lines = [f"{'path':<22} {'level':<5} {'cmplx':<6} {'kernel':<7} "
+             f"{'dtypes':<18} {'wB':<3} {'tol':<7} "
+             f"{'fallback chain':<34} description"]
     for s in rows:
         kind = "pallas" if s.pallas else "xla"
         if s.quantized:
@@ -294,7 +323,7 @@ def describe(names: Sequence[str] | None = None, *, cfg=None, params=None,
         except ValueError as e:          # surface broken chains, don't crash
             fb = f"!invalid ({e})"
         lines.append(
-            f"{s.name:<16} {s.fused_level:<5} {kind:<7} "
+            f"{s.name:<22} {s.fused_level:<5} {s.complexity:<6} {kind:<7} "
             f"{','.join(s.compute_dtypes):<18} {wb:<3} {s.tolerance:<7.0e} "
             f"{fb:<34} {s.description}")
     if cfg is not None and params is not None:
@@ -302,12 +331,12 @@ def describe(names: Sequence[str] | None = None, *, cfg=None, params=None,
         lines.append("")
         lines.append(f"bucket policy @ n_objects={cfg.n_objects} "
                      f"max_batch={max_batch} (per-path VMEM model):")
-        lines.append(f"{'path':<16} {'B/sample':>9} {'reservedB':>10} ladder")
+        lines.append(f"{'path':<22} {'B/sample':>9} {'reservedB':>10} ladder")
         for s in rows:
             pol = path_bucket_policy(s, cfg, params, max_batch=max_batch,
                                      roofline=False)
             lines.append(
-                f"{s.name:<16} {pol['per_sample_bytes']:>9} "
+                f"{s.name:<22} {pol['per_sample_bytes']:>9} "
                 f"{pol['reserved_vmem_bytes']:>10} "
                 f"{','.join(str(b) for b in pol['bucket_ladder'])}")
     return "\n".join(lines)

@@ -1,0 +1,20 @@
+"""JEDI-linear fused kernel package: O(N_o) interaction aggregation.
+
+JEDI-linear (arXiv 2508.15468, PAPERS.md) keeps f_R's FIRST layer linear
+so the pairwise message sum commutes with it: the N_o x (N_o-1) edge
+grid collapses into globally-pooled sender projections and the whole
+forward runs in O(N_o) FLOPs instead of O(N_o^2).  Modules:
+
+* ``ref.py``           — pure-JAX forwards: the O(N_o) pooled path and
+  its O(N_o^2) edge-sum oracle (the numerical spec the pooling identity
+  is validated against).
+* ``linear_kernel.py`` — the fused Pallas TPU kernel (x -> logits
+  on-chip, batch-tiled, in-kernel int8 dequant).
+* ``ops.py``           — jit'd public wrapper with autotuned batch
+  tiles and pad-to-tile batching.
+* ``autotune.py``      — the linear-live-set VMEM model (no sender
+  axis: the per-sample working set drops from O(N_o * block_s * H1)
+  to O(N_o * H1)).
+
+The paths themselves register in ``repro.core.jedi_linear_path``.
+"""

@@ -1,0 +1,77 @@
+"""Linear-live-set VMEM model for the JEDI-linear fused kernel.
+
+The sender-tiled whole-network kernel's working set is
+``O(block_b * N_o * block_s * H1)`` — the f_R grid slab.  JEDI-linear
+has NO grid and therefore no sender axis to tile: the largest live
+intermediates are the per-node projections and activations,
+``O(block_b * N_o * H1)``, a factor ``block_s`` smaller.  The batch
+tile grows by the same factor (weight HBM traffic amortizes over more
+jets per step), and graph size stops being a VMEM constraint at all:
+the per-sample set is linear in N_o, so :func:`fits_vmem` accepts
+N_o=128 tracks — and far beyond — where the untiled grid model rejects
+even one sample.
+
+The shared 1D picker (:func:`repro.kernels.autotune.pick_block_b`)
+consumes this model directly; :func:`pick_block_b_linear` is the
+one-call convenience mirroring ``fused_jedinet.autotune.pick_block_b_s``
+minus the sender knob.
+"""
+
+from __future__ import annotations
+
+# Re-exported so kernel wrappers and tests have one import surface.
+from repro.kernels.autotune import (  # noqa: F401
+    VMEM_BUDGET_BYTES,
+    _SUBLANE,
+    effective_budget,
+    mlp_widths,
+    pad_batch,
+    padded_batch,
+    pick_block_b,
+    weight_vmem_bytes,
+)
+from repro.kernels.fused_jedinet.autotune import fits_vmem  # noqa: F401
+
+
+def linear_forward_bytes_per_sample(n_objects: int, n_features: int,
+                                    fr_widths: list[int],
+                                    fo_widths: list[int],
+                                    phi_widths: list[int],
+                                    acc_bytes: int = 4) -> int:
+    """Per-jet VMEM working set of the JEDI-linear whole-network kernel.
+
+    Live at any instant: the two first-layer projections u_r / u_s
+    (each (N_o, H1) fp32), the (1, H1) sender pool, the per-NODE f_R
+    activations (the widest (N_o, width) tensor — no edge grid), the x
+    tile, the Ebar result, C = [x ‖ Ebar] and the f_O / phi_O
+    activations.  Every term is linear in N_o — the whole point.
+    """
+    n_o = n_objects
+    h1 = fr_widths[0]
+    u_proj = 2 * n_o * h1
+    pooled = h1
+    fr_acts = n_o * max(fr_widths + [_SUBLANE])
+    x_tile = n_o * n_features
+    ebar = n_o * fr_widths[-1]
+    c_tile = n_o * (n_features + fr_widths[-1])
+    fo_acts = n_o * max(fo_widths + [_SUBLANE])
+    phi_acts = max(phi_widths + [_SUBLANE])
+    return (u_proj + pooled + fr_acts + x_tile + ebar + c_tile
+            + fo_acts + phi_acts) * acc_bytes
+
+
+def pick_block_b_linear(batch: int, n_objects: int, n_features: int,
+                        fr_widths: list[int], fo_widths: list[int],
+                        phi_widths: list[int],
+                        budget_bytes: int = VMEM_BUDGET_BYTES,
+                        reserved_bytes: int = 0) -> int:
+    """Batch tile for the JEDI-linear kernel under the linear live set.
+
+    The 1D analogue of ``fused_jedinet.autotune.pick_block_b_s``: same
+    budget/reservation policy (``effective_budget``), no sender axis to
+    search — the linear model leaves only the batch knob.
+    """
+    per = linear_forward_bytes_per_sample(
+        n_objects, n_features, fr_widths, fo_widths, phi_widths)
+    return pick_block_b(batch, per,
+                        effective_budget(budget_bytes, reserved_bytes))

@@ -1,0 +1,110 @@
+"""Pure-JAX JEDI-linear forwards: O(N_o) aggregation + its edge-sum oracle.
+
+JEDI-net's f_R applies a nonlinear MLP to every (receiver, sender) pair
+before aggregating, so the edge grid is irreducible: O(N_o^2) FLOPs.
+JEDI-linear (arXiv 2508.15468) makes f_R's FIRST layer linear, and a
+linear map commutes with the sum over senders — the aggregation moves
+IN FRONT of the first nonlinearity and the grid telescopes:
+
+    Ebar1_i = sum_{j != i} (W_r x_i + W_s x_j + b1)
+            = (N_o - 1) (W_r x_i + b1) + (sum_j W_s x_j - W_s x_i)
+
+i.e. two per-node projections ``u_r = x @ W_r`` / ``u_s = x @ W_s``, ONE
+global pool of ``u_s``, and a per-node recombination — O(N_o) where the
+grid costs O(N_o^2).  The remaining f_R layers then run per NODE (the
+(B, N_o, H1) tensor) instead of per edge, which is where the FLOPs
+actually collapse.  This is a DIFFERENT model from JEDI-net (the
+nonlinearity sees the aggregated message, not each pairwise one), so
+these paths carry their own reference and accuracy story — the
+latency/accuracy trade is recorded in EXPERIMENTS.md §JEDI-linear.
+
+Two forwards share one tail:
+
+* :func:`forward_jedi_linear`          — the O(N_o) pooled production path.
+* :func:`forward_jedi_linear_edge_sum` — the same model evaluated the
+  EXPENSIVE way: materialize the (N_o, N_o, H1) first-layer grid, mask
+  the self-edge diagonal, sum over senders *before* the activation.
+  Algebraically identical, numerically independent of the pooling
+  rearrangement — the oracle that validates the O(N_o) identity (and
+  the registered ``ref`` of all jedi_linear paths).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.nn import core as nn
+
+
+def _cdt(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def first_layer_split(params, cfg, x):
+    """Bilinear-split first f_R layer: ``u_r``, ``u_s`` (fp32) and ``b1``.
+
+    Same split as the fused_jedinet kernels (w1 rows [:P] receive,
+    [P:] send); the projections accumulate to fp32 so the (N_o-1)-fold
+    recombination below doesn't amplify low-precision products.
+    """
+    cdt = _cdt(cfg)
+    layers = params["fr"]["layers"]
+    w1 = layers[0]["w"].astype(cdt)
+    b1 = layers[0]["b"].astype(jnp.float32)
+    p = cfg.n_features
+    x = x.astype(cdt)
+    u_r = (x @ w1[:p]).astype(jnp.float32)             # (B, N_o, H1)
+    u_s = (x @ w1[p:]).astype(jnp.float32)             # (B, N_o, H1)
+    return u_r, u_s, b1
+
+
+def _tail(params, cfg, x, h):
+    """Post-aggregation network shared by both forwards: remaining f_R
+    layers per NODE, C = [x ‖ Ebar], f_O, node-sum, phi_O."""
+    cdt = _cdt(cfg)
+    act = nn.ACTIVATIONS[cfg.activation]
+    layers = params["fr"]["layers"]
+    if len(layers) > 1:
+        h = act(h)
+    for i, lp in enumerate(layers[1:]):
+        h = h.astype(cdt) @ lp["w"].astype(cdt) + lp["b"].astype(cdt)
+        if i < len(layers) - 2:
+            h = act(h)
+    c = jnp.concatenate([x.astype(cdt), h.astype(cdt)], axis=-1)
+    o = nn.mlp_apply(params["fo"], c, activation=cfg.activation,
+                     compute_dtype=cdt)                # (B, N_o, D_o)
+    o_sum = jnp.sum(o, axis=-2)
+    logits = nn.mlp_apply(params["phi"], o_sum, activation=cfg.activation,
+                          compute_dtype=cdt)
+    return logits.astype(jnp.float32)
+
+
+def forward_jedi_linear(params, cfg, x):
+    """O(N_o) JEDI-linear forward. x: (B, N_o, P) -> logits (B, n_targets).
+
+    The production XLA path: two per-node projections, one global sender
+    pool, a per-node recombination — no edge grid anywhere.
+    """
+    x = x.astype(_cdt(cfg))
+    u_r, u_s, b1 = first_layer_split(params, cfg, x)
+    pooled = jnp.sum(u_s, axis=-2, keepdims=True)      # (B, 1, H1)
+    h = (cfg.n_objects - 1) * (u_r + b1) + (pooled - u_s)
+    return _tail(params, cfg, x, h)
+
+
+def forward_jedi_linear_edge_sum(params, cfg, x):
+    """O(N_o^2) oracle: the pooled identity expanded back into the grid.
+
+    Materializes the full receiver x sender first-layer grid, zeroes the
+    self-edge diagonal, and sums over senders BEFORE the activation —
+    the summand set the O(N_o) path must reproduce, computed without the
+    pooling rearrangement.  Registered as the ``ref`` of every
+    jedi_linear path so the registry-parametrized numerics tests
+    independently validate the identity at every bucket.
+    """
+    x = x.astype(_cdt(cfg))
+    u_r, u_s, b1 = first_layer_split(params, cfg, x)
+    grid = u_r[:, :, None, :] + u_s[:, None, :, :] + b1   # (B, N_o, N_o, H1)
+    mask = 1.0 - jnp.eye(cfg.n_objects, dtype=grid.dtype)
+    h = jnp.sum(grid * mask[None, :, :, None], axis=-2)   # (B, N_o, H1)
+    return _tail(params, cfg, x, h)

@@ -36,17 +36,6 @@ from repro.serving.resilient import (
     ResilientPending,
     ResilientPlan,
 )
-
-
-def __getattr__(name):
-    # PALLAS_PATHS is deprecated and computed from the registry on
-    # access (see engine.__getattr__) — kept out of the eager imports
-    # so `import repro.serving` doesn't force-load every path module.
-    if name == "PALLAS_PATHS":
-        from repro.serving import engine
-        return engine.PALLAS_PATHS
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
-
 __all__ = [
     "BatchPlan",
     "DeadlineBatcher",
@@ -58,7 +47,6 @@ __all__ = [
     "LMRequest",
     "LMWorkload",
     "NonFiniteOutput",
-    "PALLAS_PATHS",
     "PendingPlan",
     "PendingResult",
     "RequestFuture",

