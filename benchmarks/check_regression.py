@@ -214,6 +214,54 @@ def compare(fresh, base, iterate, metrics, max_regress, *, scale=1.0,
     return failures, warnings, infos, new_keys
 
 
+def _failing_path_names(failure_lines) -> set:
+    """Registered-path names out of failure lines shaped
+    ``BENCH_x.json: cfg/path[/bucket]: metric ...``."""
+    names = set()
+    for line in failure_lines:
+        _, _, rest = line.partition(": ")
+        key = rest.split(":", 1)[0]
+        parts = key.split("/")
+        if len(parts) >= 2:
+            names.add(parts[1])
+    return names
+
+
+def _audit_hint(failure_lines) -> None:
+    """Best-effort cross-reference with the static kernel-contract
+    auditor: a regressing path whose VMEM/dtype contract ALSO fails
+    statically points at kernel/bytes-model drift, not machine noise —
+    print the audit command naming it.  Never breaks the gate."""
+    try:
+        src = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src")
+        if src not in sys.path:
+            sys.path.insert(0, src)
+        import jax
+
+        from repro.analysis.kernel_audit import audit_registry
+        from repro.configs.jedi_30p import MODEL as cfg
+        from repro.core import interaction_net
+        from repro.core import paths as registry
+        names = sorted(_failing_path_names(failure_lines)
+                       & set(registry.available()))
+        if not names:
+            return
+        params = interaction_net.init(jax.random.PRNGKey(0), cfg)
+        findings = audit_registry(cfg, params, names=names)
+    except Exception as e:  # the gate's verdict must not depend on this
+        print(f"(kernel-contract cross-check unavailable: {e})")
+        return
+    flagged = sorted({f.location.split()[0].removeprefix("path=")
+                      for f in findings if f.location.startswith("path=")})
+    if flagged:
+        print("NOTE: the kernel-contract auditor ALSO flags "
+              f"{', '.join(flagged)} — this regression likely tracks "
+              "kernel/VMEM-model drift, not machine noise.  Details:\n"
+              "    PYTHONPATH=src python -m repro.analysis --audit-only "
+              f"--paths {','.join(flagged)}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh-dir", default="bench_out",
@@ -318,6 +366,7 @@ def main(argv=None) -> int:
               f"(> {args.max_regress:.0%} of baseline):")
         for line in all_failures:
             print(f"  {line}")
+        _audit_hint(all_failures)
         if allow:
             print("override active (BENCH_REGRESS_OK=1 / --allow-regress): "
                   "exiting 0; refresh the committed baselines in this PR")

@@ -1,0 +1,20 @@
+"""Static-analysis subsystem: lint rules + kernel-contract auditor.
+
+Two engines, one finding type, one CLI (``python -m repro.analysis``):
+
+* :mod:`repro.analysis.lint` — AST rules over the tracked tree
+  (thin-CLI shape, retired names, pallas containment, wall-clock
+  seams, registration-site declarations);
+* :mod:`repro.analysis.kernel_audit` — traces every registered Pallas
+  path at each bucket of its ladder and cross-checks grid/BlockSpec/
+  scratch/dtype reality against the autotuner bytes models, without
+  executing a kernel.
+
+Per-rule allowlists live in ``analysis.toml`` at the repo root.
+"""
+
+from repro.analysis.config import AnalysisConfig
+from repro.analysis.findings import Finding
+from repro.analysis.lint import LintContext, run_lint
+
+__all__ = ["AnalysisConfig", "Finding", "LintContext", "run_lint"]

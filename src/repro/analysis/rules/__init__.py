@@ -1,0 +1,23 @@
+"""Built-in lint rules.
+
+``ALL_RULES`` is the one registry the CLI and the tier-1 test resolve
+rules through; add a new rule module here and it runs everywhere at
+once.
+"""
+
+from repro.analysis.rules.pallas_containment import PallasContainmentRule
+from repro.analysis.rules.register_path_decl import RegisterPathDeclRule
+from repro.analysis.rules.retired_names import RetiredNamesRule
+from repro.analysis.rules.thin_cli import ThinCliRule
+from repro.analysis.rules.wall_clock import WallClockRule
+
+ALL_RULES = (
+    ThinCliRule(),
+    RetiredNamesRule(),
+    PallasContainmentRule(),
+    WallClockRule(),
+    RegisterPathDeclRule(),
+)
+
+__all__ = ["ALL_RULES", "ThinCliRule", "RetiredNamesRule",
+           "PallasContainmentRule", "WallClockRule", "RegisterPathDeclRule"]

@@ -1,0 +1,54 @@
+"""Rule ``pallas-containment``: ``pallas_call`` lives only in kernels/.
+
+Every Pallas entry point must sit under ``src/repro/kernels/`` where
+the autotuner models, the VMEM budget discipline, and the kernel-
+contract auditor (:mod:`repro.analysis.kernel_audit`) can see it.  A
+``pallas_call`` issued from core/, serving/ or a test dodges all
+three — the registry wrapper + kernels-module split is the contract.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.config import AnalysisConfig
+from repro.analysis.findings import Finding
+from repro.analysis.lint import LintContext
+
+KERNELS_PREFIX = "src/repro/kernels/"
+
+
+def _is_pallas_call(node: ast.AST) -> bool:
+    """Matches ``pl.pallas_call(...)`` / ``pallas_call(...)`` /
+    ``jax.experimental.pallas.pallas_call(...)`` call sites."""
+    if not isinstance(node, ast.Call):
+        return False
+    fn = node.func
+    if isinstance(fn, ast.Name):
+        return fn.id == "pallas_call"
+    if isinstance(fn, ast.Attribute):
+        return fn.attr == "pallas_call"
+    return False
+
+
+class PallasContainmentRule:
+    name = "pallas-containment"
+    description = "no pl.pallas_call call site outside src/repro/kernels/"
+
+    def check(self, ctx: LintContext,
+              config: AnalysisConfig) -> Iterable[Finding]:
+        for rel in ctx.python_files():
+            if rel.startswith(KERNELS_PREFIX):
+                continue
+            tree, err = ctx.try_tree(rel)
+            if err is not None:
+                yield err
+                continue
+            for node in ast.walk(tree):
+                if _is_pallas_call(node):
+                    yield Finding(
+                        self.name, rel, node.lineno,
+                        "pallas_call outside src/repro/kernels/ — kernels "
+                        "live behind the kernels package so the autotuner "
+                        "models and the kernel-contract auditor cover them")

@@ -1,0 +1,48 @@
+"""Rule ``retired-names``: retired forward-path surfaces stay dead.
+
+Ported from ``tests/test_repo_hygiene.py``'s grep guard.  The
+pre-registry surfaces (the flat forward-fn mapping on
+``interaction_net`` and the lazy path-name snapshots on the serving
+package) must not creep back in via copy-paste from old branches: the
+registry (``repro.core.paths``) is the one forward-path API.  The
+sanctioned mentions (PR history, the issue text that ordered the
+removal, the ruff ban list, this rule, and the legacy test shim) live
+in ``analysis.toml`` under ``[rules.retired-names] allow`` — the ruff
+TID251 bans stay as a second line of defense for imports.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Iterable
+
+from repro.analysis.config import AnalysisConfig
+from repro.analysis.findings import Finding
+from repro.analysis.lint import LintContext
+
+# Built by concatenation so this module does not match its own guard.
+RETIRED_NAMES = ("FORWARD" + "_FNS", "PALLAS" + "_PATHS")
+
+
+class RetiredNamesRule:
+    name = "retired-names"
+    description = ("no tracked text file mentions the retired pre-registry "
+                   "forward-path surface names")
+
+    def check(self, ctx: LintContext,
+              config: AnalysisConfig) -> Iterable[Finding]:
+        names = tuple(config.options.get(self.name, {}).get(
+            "names", RETIRED_NAMES))
+        pattern = re.compile("|".join(map(re.escape, names)))
+        for rel in ctx.files():
+            try:
+                text = ctx.source(rel)
+            except (OSError, UnicodeDecodeError):
+                continue
+            for i, line in enumerate(text.splitlines(), 1):
+                if pattern.search(line):
+                    yield Finding(
+                        self.name, rel, i,
+                        "retired forward-path surface name resurfaced "
+                        "(use the repro.core.paths registry instead): "
+                        f"{line.strip()!r}")

@@ -102,6 +102,14 @@ def _ref_int8(qparams, cfg, x):
     return forward_sr(dequantize_params(qparams), cfg, x)
 
 
+def _int8_residency(cfg, qparams, batch, **kw):
+    # Same sender-tiled kernel and tuner as fused_full; ``qparams`` is
+    # already quantized, so weight_vmem_bytes bills int8 tensors at
+    # 1 byte and the model reflects the smaller residency honestly.
+    from repro.kernels.fused_jedinet.autotune import modeled_residency
+    return modeled_residency(cfg, qparams, batch, **kw)
+
+
 @register_path(
     name="int8_fused_full",
     ref=_ref_int8,
@@ -120,6 +128,8 @@ def _ref_int8(qparams, cfg, x):
     # demotes to the fp32 fused kernel, which itself bottoms out in the
     # XLA reference — int8_fused_full -> fused_full -> sr_split.
     fallback="fused_full",
+    complexity="O(N^2)",
+    residency_model=_int8_residency,
     description="int8-weight whole-network kernel, in-VMEM dequant",
 )
 def forward_int8_fused_full(qparams, cfg, x, *, interpret: bool = False):

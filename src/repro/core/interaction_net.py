@@ -285,25 +285,42 @@ def forward_sr_split(params, cfg: JediNetConfig, x, *, grid: bool = True):
 # numerics tests) discovers these through the registry.
 # ---------------------------------------------------------------------------
 
+def _fused_residency(cfg, params, batch, **kw):
+    from repro.kernels.fused_jedinet.autotune import modeled_residency_edge
+    return modeled_residency_edge(cfg, params, batch, **kw)
+
+
+def _fused_full_residency(cfg, params, batch, **kw):
+    from repro.kernels.fused_jedinet.autotune import modeled_residency
+    return modeled_residency(cfg, params, batch, **kw)
+
+
 paths.register(paths.PathSpec(
     name="dense", forward=forward_dense, ref=forward_sr,
     fused_level="none", tolerance=2e-4,
+    complexity="O(N^2)", fallback=None,
     description="paper-[5] baseline: explicit Rr/Rs MMMs"))
 paths.register(paths.PathSpec(
     name="sr", forward=forward_sr, ref=forward_dense,
     fused_level="none", tolerance=2e-4,
+    complexity="O(N^2)", fallback=None,
     description="strength reduction + edge-major layout (Sec 3.1-3.3)"))
 paths.register(paths.PathSpec(
     name="sr_split", forward=forward_sr_split, ref=forward_sr,
     fused_level="none", tolerance=2e-4,
+    complexity="O(N^2)", fallback=None,
     description="SR + bilinear first-layer split + dense grid (XLA)"))
 paths.register(paths.PathSpec(
     name="fused", forward=forward_fused, ref=forward_sr,
-    fused_level="edge", pallas=True, tolerance=5e-4, fallback="sr",
+    fused_level="edge", pallas=True, tolerance=5e-4,
+    complexity="O(N^2)", fallback="sr",
+    residency_model=_fused_residency,
     description="Pallas edge kernel: B-construct + f_R + MMM3 in VMEM"))
 paths.register(paths.PathSpec(
     name="fused_full", forward=forward_fused_full, ref=forward_sr,
-    fused_level="full", pallas=True, tolerance=5e-4, fallback="sr_split",
+    fused_level="full", pallas=True, tolerance=5e-4,
+    complexity="O(N^2)", fallback="sr_split",
+    residency_model=_fused_full_residency,
     description="whole-network Pallas kernel: x -> logits on-chip"))
 
 

@@ -70,6 +70,13 @@ def _linear_per_sample_bytes(cfg, params):
         mlp_widths(params["fo"]), mlp_widths(params["phi"]))
 
 
+def _linear_residency(cfg, params, batch, **kw):
+    """PathSpec.residency_model hook: the kernel autotuner's tiling
+    decision as data, for the static kernel-contract auditor."""
+    from repro.kernels.jedi_linear.autotune import modeled_residency
+    return modeled_residency(cfg, params, batch, **kw)
+
+
 def _ref_edge_sum(params, cfg, x):
     """Reference: the O(N_o^2) edge-sum oracle of the SAME model."""
     from repro.kernels.jedi_linear.ref import forward_jedi_linear_edge_sum
@@ -120,6 +127,7 @@ def forward_jedi_linear(params, cfg, x):
     # Degradation ladder: a failing jedi kernel demotes to the SAME
     # model in XLA first (accuracy story unchanged), then to sr_split.
     fallback="jedi_linear",
+    residency_model=_linear_residency,
     description="JEDI-linear whole-network Pallas kernel, O(N) on-chip",
 )
 def forward_jedi_linear_full(params, cfg, x, *, interpret: bool = False):
@@ -144,6 +152,7 @@ def forward_jedi_linear_full(params, cfg, x, *, interpret: bool = False):
     flops_model=_jedi_flops,
     per_sample_bytes=_linear_per_sample_bytes,
     fallback="jedi_linear_full",
+    residency_model=_linear_residency,
     description="int8-weight JEDI-linear kernel, in-VMEM dequant",
 )
 def forward_int8_jedi_linear_full(qparams, cfg, x, *, interpret: bool = False):

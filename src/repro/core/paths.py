@@ -78,6 +78,12 @@ class PathSpec:
     fallback: str | None = None             # degrade-to path (see fallback_chain)
     complexity: str = "O(N^2)"              # aggregation class (COMPLEXITY_CLASSES)
     flops_model: Callable | None = None     # (cfg, batch) -> FLOPs of one step
+    residency_model: Callable | None = None  # (cfg, params, batch) -> modeled
+    #   tiling/residency dict (the kernel autotuner's introspection hook,
+    #   e.g. fused_jedinet.autotune.modeled_residency) — what the static
+    #   kernel-contract auditor cross-checks the traced pallas_call
+    #   against.  Required for pallas=True paths (the auditor flags its
+    #   absence); meaningless for XLA paths.
     description: str = ""
 
     def __post_init__(self):
@@ -165,6 +171,18 @@ class PathSpec:
             cfg, buckets, level=self.fused_level,
             compute_bytes=compute_bytes, chips=chips,
             weight_bytes=self.weight_bytes, flops_fn=self.flops_model)
+
+    def audit(self, cfg, params, *, max_batch: int = 1024) -> list:
+        """Statically audit this path's kernel contract: trace the
+        forward at every rung of its bucket ladder (abstract shapes, no
+        kernel execution) and cross-check the pallas_call's grid /
+        BlockSpecs / scratch / accumulator dtypes against
+        :attr:`residency_model` and the VMEM budget.  Returns the list
+        of findings (empty == contract holds).  ``params`` are RAW
+        (untransformed) — the audit applies :meth:`prepare_params`
+        itself so it sees the serving-time pytree."""
+        from repro.analysis.kernel_audit import audit_path
+        return audit_path(self, cfg, params, max_batch=max_batch)
 
 
 # ---------------------------------------------------------------------------

@@ -171,6 +171,89 @@ def pick_block_b_s(batch: int, n_objects: int, n_features: int,
     return best if best is not None else fallback
 
 
+def modeled_residency(cfg, params, batch: int, *,
+                      block_b: int | None = None,
+                      block_s: int | None = None,
+                      budget_bytes: int = VMEM_BUDGET_BYTES) -> dict:
+    """The tiling decision :func:`ops.fused_forward_full` will make for
+    ``batch`` samples, as data — the modeled-residency introspection
+    hook the kernel-contract auditor (``repro.analysis.kernel_audit``)
+    cross-checks against the *traced* ``pallas_call``.
+
+    Mirrors the wrapper's tuner invocation EXACTLY (including the
+    pinned-knob branches): any drift between this mirror and the real
+    BlockSpecs/grid is precisely the silent-bug class the auditor
+    exists to catch, so keep the two in lockstep.
+
+    Returns ``{kernel, block_b, block_s, grid, per_sample_bytes,
+    reserved_bytes, effective_budget, weight_residency_bytes, fits}``;
+    ``weight_residency_bytes`` is the VMEM the weight blocks (and, for
+    quantized params, the dequant-scale vector) occupy at the dtypes the
+    kernel ships — what the traced input BlockSpecs must add up to.
+    """
+    fr_w = mlp_widths(params["fr"])
+    fo_w = mlp_widths(params["fo"])
+    phi_w = mlp_widths(params["phi"])
+    n_o, n_f = cfg.n_objects, cfg.n_features
+    reserved = weight_vmem_bytes(params, cfg.compute_dtype)
+    if block_b is None and block_s is None:
+        block_b, block_s = pick_block_b_s(
+            batch, n_o, n_f, fr_w, fo_w, phi_w,
+            budget_bytes=budget_bytes, reserved_bytes=reserved)
+    elif block_b is None:
+        block_s = min(int(block_s), n_o)
+        per = full_forward_tiled_bytes_per_sample(
+            n_o, n_f, fr_w, fo_w, phi_w, block_s)
+        block_b = pick_block_b(batch, per,
+                               effective_budget(budget_bytes, reserved))
+    elif block_s is None:
+        block_s = pick_block_s(block_b, n_o, n_f, fr_w, fo_w, phi_w,
+                               budget_bytes=budget_bytes,
+                               reserved_bytes=reserved)
+    else:
+        block_s = min(int(block_s), n_o)
+    per = full_forward_tiled_bytes_per_sample(
+        n_o, n_f, fr_w, fo_w, phi_w, block_s)
+    budget = effective_budget(budget_bytes, reserved)
+    return {
+        "kernel": "fused_jedinet.full",
+        "block_b": int(block_b),
+        "block_s": int(block_s),
+        "grid": (padded_batch(batch, block_b) // block_b,
+                 -(-n_o // block_s)),
+        "per_sample_bytes": int(per),
+        "reserved_bytes": int(reserved),
+        "effective_budget": int(budget),
+        "weight_residency_bytes": int(reserved),
+        "fits": fits_vmem(per, budget),
+    }
+
+
+def modeled_residency_edge(cfg, params, batch: int, *,
+                           block_b: int | None = None,
+                           budget_bytes: int = VMEM_BUDGET_BYTES) -> dict:
+    """:func:`modeled_residency` twin for the edge-only kernel
+    (:func:`ops.fused_edge_block`): batch-gridded only, tile picked from
+    :func:`edge_block_bytes_per_sample` with NO weight reservation
+    (mirroring the wrapper), and only the f_R weights ship to VMEM."""
+    fr_w = mlp_widths(params["fr"])
+    per = edge_block_bytes_per_sample(cfg.n_objects, cfg.n_features, fr_w)
+    if block_b is None:
+        block_b = pick_block_b(batch, per, budget_bytes)
+    weights = weight_vmem_bytes({"fr": params["fr"]}, cfg.compute_dtype)
+    return {
+        "kernel": "fused_jedinet.edge",
+        "block_b": int(block_b),
+        "block_s": None,
+        "grid": (padded_batch(batch, block_b) // block_b,),
+        "per_sample_bytes": int(per),
+        "reserved_bytes": 0,
+        "effective_budget": int(budget_bytes),
+        "weight_residency_bytes": int(weights),
+        "fits": fits_vmem(per, budget_bytes),
+    }
+
+
 def pick_block_s(block_b: int, n_objects: int, n_features: int,
                  fr_widths: list[int], fo_widths: list[int],
                  phi_widths: list[int],

@@ -60,6 +60,37 @@ def linear_forward_bytes_per_sample(n_objects: int, n_features: int,
             + fo_acts + phi_acts) * acc_bytes
 
 
+def modeled_residency(cfg, params, batch: int, *,
+                      block_b: int | None = None,
+                      budget_bytes: int = VMEM_BUDGET_BYTES) -> dict:
+    """The tiling decision :func:`ops.jedi_linear_forward_full` will make
+    for ``batch`` samples, as data — the modeled-residency introspection
+    hook the kernel-contract auditor (``repro.analysis.kernel_audit``)
+    cross-checks against the traced ``pallas_call``.  Mirrors the
+    wrapper's tuner invocation exactly; same contract as
+    ``fused_jedinet.autotune.modeled_residency``."""
+    fr_w = mlp_widths(params["fr"])
+    fo_w = mlp_widths(params["fo"])
+    phi_w = mlp_widths(params["phi"])
+    per = linear_forward_bytes_per_sample(
+        cfg.n_objects, cfg.n_features, fr_w, fo_w, phi_w)
+    reserved = weight_vmem_bytes(params, cfg.compute_dtype)
+    budget = effective_budget(budget_bytes, reserved)
+    if block_b is None:
+        block_b = pick_block_b(batch, per, budget)
+    return {
+        "kernel": "jedi_linear.full",
+        "block_b": int(block_b),
+        "block_s": None,
+        "grid": (padded_batch(batch, block_b) // block_b,),
+        "per_sample_bytes": int(per),
+        "reserved_bytes": int(reserved),
+        "effective_budget": int(budget),
+        "weight_residency_bytes": int(reserved),
+        "fits": fits_vmem(per, budget),
+    }
+
+
 def pick_block_b_linear(batch: int, n_objects: int, n_features: int,
                         fr_widths: list[int], fo_widths: list[int],
                         phi_widths: list[int],

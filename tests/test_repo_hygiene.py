@@ -7,33 +7,19 @@ silent and maddening, so tier-1 fails fast on any tracked bytecode and
 on a ``.gitignore`` that stopped covering it.  CI runs the same check
 shell-side in the lint job; this test makes it bite locally too.
 
-The legacy-name guard keeps the retired pre-registry forward-path
-surfaces (the flat forward-fn mapping on ``interaction_net`` and the
-lazy path-name snapshots on the serving package) from creeping back in
-via copy-paste from old branches: the registry
-(``repro.core.paths``) is the one forward-path API.
+The legacy-name guard moved into the lint framework
+(``repro.analysis.rules.retired_names``, rule id ``retired-names``,
+allowlist in ``analysis.toml``); the test here is the thin tier-1
+assertion that the rule reports zero findings, with ruff's TID251 bans
+as the second line of defense for imports.
 """
 
 import pathlib
-import re
 import subprocess
 
 import pytest
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
-
-# Built by concatenation so this file does not match its own guard.
-LEGACY_NAMES = ("FORWARD" + "_FNS", "PALLAS" + "_PATHS")
-
-# Files that may legitimately mention the retired names: PR history,
-# the issue text that ordered the removal, the lint ban list, and this
-# guard itself.
-LEGACY_ALLOWED = {
-    "CHANGES.md",
-    "ISSUE.md",
-    "ruff.toml",
-    "tests/test_repo_hygiene.py",
-}
 
 
 def _git(*args):
@@ -73,22 +59,11 @@ def test_git_would_ignore_a_stray_pyc():
     assert res.returncode == 0
 
 
-def test_no_legacy_forward_path_surfaces(tracked_files):
-    """Grep every tracked text file for the retired names.  New code
+def test_no_legacy_forward_path_surfaces():
+    """The ``retired-names`` lint rule reports zero findings: new code
     must go through ``paths.available()`` / ``paths.get()``."""
-    pattern = re.compile("|".join(map(re.escape, LEGACY_NAMES)))
-    offenders = []
-    for rel in tracked_files:
-        if rel in LEGACY_ALLOWED:
-            continue
-        path = REPO / rel
-        try:
-            text = path.read_text(encoding="utf-8")
-        except (UnicodeDecodeError, FileNotFoundError):
-            continue
-        for i, line in enumerate(text.splitlines(), 1):
-            if pattern.search(line):
-                offenders.append(f"{rel}:{i}: {line.strip()}")
-    assert not offenders, (
-        "retired forward-path surface names resurfaced (use the "
-        "repro.core.paths registry instead):\n" + "\n".join(offenders))
+    from repro.analysis.config import AnalysisConfig
+    from repro.analysis.lint import run_lint
+    from repro.analysis.rules.retired_names import RetiredNamesRule
+    findings = run_lint(REPO, [RetiredNamesRule()], AnalysisConfig.load(REPO))
+    assert findings == [], "\n".join(f.render() for f in findings)

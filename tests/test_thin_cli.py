@@ -1,108 +1,44 @@
-"""AST guard: launch CLIs stay thin shells over the serving package.
+"""Launch CLIs stay thin shells — now enforced by the lint framework.
 
-The PR that unified the serving fabric moved every behavior out of
-``repro.launch.trigger_serve`` and ``repro.launch.serve`` into
-``repro.serving.*``; these tests keep it that way.  A thin CLI module
-may contain ONLY: a docstring, imports, simple constant assignments, a
-``main`` function, and the ``if __name__ == "__main__"`` block — and
-``main`` itself may only build an argparse parser and call into
-``repro.serving``.  No loops, no classes, no numerics imports: if a
-change needs any of those, it belongs behind the serving package where
-the event loop, the benchmarks and the tests can reuse it.
+The AST guard that lived here moved into
+``repro.analysis.rules.thin_cli`` (rule id ``thin-cli``) so the same
+check runs in `python -m repro.analysis`, CI, and here; this test is
+the thin tier-1 assertion that the rule reports zero findings on the
+repo, plus a sanity check that the rule still BITES (a deliberately
+fat CLI must be flagged — a silently dead guard is worse than none).
 """
 
-import ast
 import pathlib
 
-import pytest
+from repro.analysis.config import AnalysisConfig
+from repro.analysis.lint import LintContext, run_lint
+from repro.analysis.rules.thin_cli import ThinCliRule
 
-SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
-THIN_CLIS = ("repro/launch/trigger_serve.py", "repro/launch/serve.py")
-
-# engine/batching logic needs numerics; a thin shell must not
-FORBIDDEN_IMPORTS = ("jax", "numpy", "jax.numpy")
-# the only package a thin CLI may reach into (argparse etc. are stdlib)
-ALLOWED_REPRO_PREFIX = "repro.serving"
+REPO = pathlib.Path(__file__).resolve().parent.parent
 
 
-def _tree(rel):
-    path = SRC / rel
-    return ast.parse(path.read_text(), filename=str(path))
+def test_thin_clis_report_zero_findings():
+    findings = run_lint(REPO, [ThinCliRule()], AnalysisConfig.load(REPO))
+    assert findings == [], "\n".join(f.render() for f in findings)
 
 
-def _imported_modules(tree):
-    mods = []
-    for node in ast.walk(tree):
-        if isinstance(node, ast.Import):
-            mods.extend(a.name for a in node.names)
-        elif isinstance(node, ast.ImportFrom):
-            mods.append(node.module or "")
-    return mods
-
-
-@pytest.mark.parametrize("rel", THIN_CLIS)
-def test_cli_top_level_shape(rel):
-    """Top level: docstring, imports, constants, main(), __main__ guard."""
-    tree = _tree(rel)
-    for i, node in enumerate(tree.body):
-        if i == 0 and isinstance(node, ast.Expr):
-            continue                    # module docstring
-        if isinstance(node, (ast.Import, ast.ImportFrom)):
-            continue
-        if isinstance(node, (ast.Assign, ast.AnnAssign)):
-            continue                    # simple module constants
-        if isinstance(node, ast.FunctionDef) and node.name == "main":
-            continue
-        if isinstance(node, ast.If):    # if __name__ == "__main__": main()
-            cond = ast.unparse(node.test)
-            assert "__name__" in cond, (
-                f"{rel}: top-level `if {cond}` — only the __main__ guard "
-                "is allowed")
-            continue
-        pytest.fail(
-            f"{rel}:{node.lineno}: top-level {type(node).__name__} — thin "
-            "CLI modules hold only imports, constants, main() and the "
-            "__main__ guard; move logic into repro.serving")
-
-
-@pytest.mark.parametrize("rel", THIN_CLIS)
-def test_cli_main_has_no_logic(rel):
-    """main() may parse args and delegate — no loops/branches/defs."""
-    tree = _tree(rel)
-    main = next(n for n in tree.body
-                if isinstance(n, ast.FunctionDef) and n.name == "main")
-    for node in ast.walk(main):
-        if node is main:
-            continue
-        assert not isinstance(
-            node, (ast.For, ast.While, ast.FunctionDef, ast.AsyncFunctionDef,
-                   ast.ClassDef, ast.Try, ast.With)), (
-            f"{rel}:{node.lineno}: {type(node).__name__} inside main() — "
-            "batching/serving logic belongs in repro.serving")
-        if node is not main and isinstance(node, ast.If):
-            pytest.fail(
-                f"{rel}:{node.lineno}: branch inside main() — routing "
-                "decisions belong in repro.serving")
-
-
-@pytest.mark.parametrize("rel", THIN_CLIS)
-def test_cli_imports_only_serving(rel):
-    """No numerics, and no repro package other than repro.serving."""
-    for mod in _imported_modules(_tree(rel)):
-        root = mod.split(".")[0]
-        assert root not in FORBIDDEN_IMPORTS, (
-            f"{rel}: imports {mod!r} — a thin CLI has no numerics")
-        if root == "repro":
-            assert mod == "repro.serving" or mod.startswith(
-                "repro.serving."), (
-                f"{rel}: imports {mod!r} — thin CLIs reach the framework "
-                f"only through {ALLOWED_REPRO_PREFIX}")
-
-
-@pytest.mark.parametrize("rel", THIN_CLIS)
-def test_cli_still_defines_main(rel):
-    """The shells stay runnable: a main() and a __main__ guard exist."""
-    tree = _tree(rel)
-    names = [n.name for n in tree.body if isinstance(n, ast.FunctionDef)]
-    assert names == ["main"]
-    assert any(isinstance(n, ast.If) for n in tree.body)
+def test_rule_bites_on_a_fat_cli(tmp_path):
+    (tmp_path / "fat_cli.py").write_text(
+        '"""doc."""\n'
+        "import jax\n"
+        "from repro.core import paths\n"
+        "def helper():\n"
+        "    pass\n"
+        "def main():\n"
+        "    for i in range(3):\n"
+        "        print(i)\n"
+        'if __name__ == "__main__":\n'
+        "    main()\n")
+    config = AnalysisConfig()
+    config.options["thin-cli"] = {"paths": ["fat_cli.py"]}
+    findings = run_lint(tmp_path, [ThinCliRule()], config)
+    messages = "\n".join(f.render() for f in findings)
+    assert "imports 'jax'" in messages
+    assert "imports 'repro.core'" in messages
+    assert "top-level def helper()" in messages
+    assert "For inside main()" in messages
