@@ -325,6 +325,26 @@ def main(argv=None) -> int:
         scale = _speed_scale(fresh, base)
         print(f"  machine-speed scale: {scale:.2f}x "
               f"(fresh/baseline calibration)")
+        if scale > 1.5 or scale < 1 / 1.5:
+            fc, bc = fresh.get("calibration_us"), base.get("calibration_us")
+            print(
+                "  " + "!" * 66 + "\n"
+                f"  WARN: calibration stamps differ by {scale:.2f}x — fresh "
+                f"{fc:.1f} us vs baseline {bc:.1f} us.\n"
+                "  The fresh run and the committed baseline were measured "
+                "on machines\n"
+                "  (or machine states) of very different speed; the "
+                "speed-normalized\n"
+                "  verdicts below lean entirely on the calibration "
+                "yardstick.  This\n"
+                "  container's CPU drifts ~2x between windows — REGENERATE "
+                "BASELINE AND\n"
+                "  COMPARISON IN THE SAME QUIET WINDOW before trusting a "
+                "failure here\n"
+                "  (serialized run, nothing else on the machine; see "
+                "EXPERIMENTS.md\n"
+                "  §Serving).\n"
+                "  " + "!" * 66)
         if name == "BENCH_fused.json":
             fails, warns, infos, new = compare(
                 fresh, base, _iter_fused, ["wall_us"], args.max_regress,

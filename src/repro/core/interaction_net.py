@@ -30,6 +30,7 @@ is exposed through the dense baseline for fidelity.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Sequence
 
 import jax
@@ -334,9 +335,20 @@ def loss_fn(params, cfg: JediNetConfig, batch, *, forward: str = "sr"):
     NOTE: transform hooks are inference-time.  Training THROUGH a
     quantized path gets degenerate gradients (round() is flat — there
     is no straight-through estimator here); train on an fp32 path and
-    quantize the trained weights at serving time.
+    quantize the trained weights at serving time.  Doing it anyway
+    warns (see the ROADMAP "Full low-precision MXU pipeline" item for
+    the planned STE/QAT trainer).
     """
     spec = paths.get(forward)
+    if spec.quantized:
+        warnings.warn(
+            f"loss_fn through quantized path {forward!r}: the params "
+            "transform rounds weights with no straight-through "
+            "estimator, so gradients through the quantizer are "
+            "degenerate (flat).  Train on an fp32 path and quantize at "
+            "serving time — QAT/STE is the ROADMAP 'Full low-precision "
+            "MXU pipeline' item.",
+            UserWarning, stacklevel=2)
     kw = {}
     if spec.pallas and jax.default_backend() != "tpu":
         kw["interpret"] = True

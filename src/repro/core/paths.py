@@ -307,6 +307,14 @@ def fallback_chain(name: str) -> list[str]:
     return chain
 
 
+def terminal_rung(name: str) -> str:
+    """The non-Pallas reference path at the bottom of ``name``'s
+    fallback chain — the rung the sentinel's shadow re-execution trusts
+    as its online oracle (:mod:`repro.serving.sentinel`), and the one
+    :func:`fallback_chain` guarantees always serves."""
+    return fallback_chain(name)[-1]
+
+
 def validate_fallbacks() -> dict[str, list[str]]:
     """Resolve every registered path's fallback chain; raises on the
     first broken one (unknown link, cycle, or Pallas terminal).  Returns

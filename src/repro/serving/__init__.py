@@ -9,7 +9,10 @@ One stack, four layers (see core.py for the architecture notes):
   :class:`LMEngine` (prefill + slot-recycling decode) instantiate the
   core;
 * **resilience** — :class:`ResilientEngine` wraps a workload engine in
-  the degradation ladder / shedding / health state machine;
+  the degradation ladder / shedding / health state machine; the
+  :class:`Sentinel` (opt-in) adds the silent-corruption defense:
+  golden canaries, terminal-rung shadow re-execution, canary-gated
+  quarantine;
 * **front-end** — :class:`ServingLoop` drains a live request queue
   through the :class:`DeadlineBatcher` into any of the above, with
   bounded-inflight backpressure and per-request :class:`RequestFuture`
@@ -26,7 +29,15 @@ from repro.serving.core import (
     serve_stream,
 )
 from repro.serving.engine import ServingEngine, TriggerWorkload
-from repro.serving.faults import Fault, FaultInjector, InjectedFault
+from repro.serving.faults import (
+    LOUD_SEAMS,
+    SEAMS,
+    SILENT_SEAMS,
+    Fault,
+    FaultInjector,
+    InjectedFault,
+    StaleCacheFn,
+)
 from repro.serving.lm import LMEngine, LMRequest, LMWorkload
 from repro.serving.loop import RequestFuture, ServingLoop
 from repro.serving.metrics import ServingMetrics, kgps, percentile
@@ -36,7 +47,11 @@ from repro.serving.resilient import (
     ResilientPending,
     ResilientPlan,
 )
+from repro.serving.sentinel import Sentinel, SentinelConfig
 __all__ = [
+    "LOUD_SEAMS",
+    "SEAMS",
+    "SILENT_SEAMS",
     "BatchPlan",
     "DeadlineBatcher",
     "ExecutionCore",
@@ -53,9 +68,12 @@ __all__ = [
     "ResilientEngine",
     "ResilientPending",
     "ResilientPlan",
+    "Sentinel",
+    "SentinelConfig",
     "ServingEngine",
     "ServingLoop",
     "ServingMetrics",
+    "StaleCacheFn",
     "TriggerWorkload",
     "WatchdogTimeout",
     "Workload",

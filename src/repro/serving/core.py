@@ -119,6 +119,17 @@ class Workload:
         warm`)."""
         raise NotImplementedError
 
+    # -- silent fault seams (optional) --------------------------------------
+
+    def corrupted(self, seam: str, factor: float, bucket):
+        """A compiled callable built from silently corrupted params, for
+        the ``scale_drift`` / ``weight_corrupt`` fault seams — or
+        ``None`` when the corruption does not apply to this workload
+        (no params, nothing to drift).  Default: not corruptible; the
+        fault then does not fire (see ``FaultInjector.corrupt_build``).
+        """
+        return None
+
 
 def serve_stream(fwd, stream, *, warmup: int = 2, metrics=None, bucket=None):
     """Double-buffered device-feed loop; returns per-batch latencies.
@@ -305,9 +316,27 @@ class ExecutionCore:
                 # callable never recompiles, so it cannot re-fail here
                 self.injector.check("compile", path=self.workload.name,
                                     bucket=bucket)
-            fn = self.workload.build(bucket)
+                # silent build seams (scale_drift / weight_corrupt):
+                # the cached callable is built from corrupted params —
+                # finite wrong answers persist until the entry is
+                # rebuilt (evict()), exactly like a poisoned cache
+                fn = self.injector.corrupt_build(self.workload, bucket)
+            if fn is None:
+                fn = self.workload.build(bucket)
+            if self.injector is not None:
+                # stale_cache seam: the entry replays the previous
+                # dispatch's output — real logits, wrong events
+                fn = self.injector.wrap_stale(
+                    fn, path=self.workload.name, bucket=bucket)
             self._cache[key] = fn
         return fn
+
+    def evict(self, bucket) -> None:
+        """Drop one bucket's cached callable so the next dispatch
+        rebuilds it.  The sentinel's quarantine calls this on a silent-
+        corruption trip: a poisoned compiled entry must be rebuilt from
+        source params, never re-trusted."""
+        self._cache.pop(self.workload.cache_key(bucket), None)
 
     @property
     def cache_size(self) -> int:
@@ -367,7 +396,7 @@ class ExecutionCore:
         return self.workload.pad(x, bucket)
 
     def infer(self, x, *, record: bool = True, sync: bool = True,
-              timeout_s: float | None = None):
+              timeout_s: float | None = None, bucket: int | None = None):
         """Serve ``x`` (n, ...): pad to bucket, dispatch, slice back.
 
         Requests larger than the top bucket are chunked through it; chunk
@@ -384,8 +413,20 @@ class ExecutionCore:
         recorded when the result is realized, never on dispatch.
         ``timeout_s`` arms the realization watchdog (sync path only;
         async callers pass it to ``PendingResult.result``).
+        ``bucket`` PINS the compile bucket instead of resolving it from
+        the row count — the sentinel's canaries use this to ride a
+        specific bucket's cached callable with a small probe batch.
         """
         x = np.asarray(x)
+        pin = bucket
+        if pin is not None:
+            if pin not in self.bucket_sizes:
+                raise ValueError(
+                    f"pinned bucket {pin} not in ladder {self.bucket_sizes}")
+            if x.shape[0] > pin:
+                raise ValueError(
+                    f"request of {x.shape[0]} rows cannot ride pinned "
+                    f"bucket {pin}")
         top = self.bucket_sizes[-1]
         chunks = []
         for i in range(0, x.shape[0], top):
@@ -396,7 +437,7 @@ class ExecutionCore:
                 jax.block_until_ready(chunks[-MAX_INFLIGHT_CHUNKS][0])
             chunk = x[i:i + top]
             n_valid = chunk.shape[0]
-            bucket = self.bucket_for(n_valid)
+            bucket = self.bucket_for(n_valid) if pin is None else pin
             if self.injector is not None:
                 self.injector.check("dispatch", path=self.workload.name,
                                     bucket=bucket)

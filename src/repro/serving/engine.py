@@ -35,6 +35,7 @@ the historical engine API (``infer`` / ``run_plan`` / ``run_stream`` /
 
 from __future__ import annotations
 
+import copy
 import functools
 
 import jax
@@ -54,6 +55,7 @@ from repro.serving.core import (  # noqa: F401  (re-exported: historical home)
     Workload,
     serve_stream,
 )
+from repro.serving import faults
 from repro.serving.metrics import ServingMetrics
 
 
@@ -130,6 +132,23 @@ class TriggerWorkload(Workload):
     def placeholder(self, bucket: int) -> np.ndarray:
         c = self.cfg
         return np.zeros((bucket, c.n_objects, c.n_features), np.float32)
+
+    def corrupted(self, seam: str, factor: float, bucket):
+        # Silent fault seams: rebuild the bucket's compiled fn from
+        # corrupted params.  Returning None means "does not apply"
+        # (e.g. scale_drift on an fp32 path with no w_scale leaves),
+        # and the armed fault keeps its budget.
+        if seam == "scale_drift":
+            bad = faults.drift_scales(self.params, factor)
+        elif seam == "weight_corrupt":
+            bad = faults.corrupt_weight(self.params, factor)
+        else:
+            return None
+        if bad is self.params:
+            return None
+        twin = copy.copy(self)
+        twin.params = bad
+        return twin.build(bucket)
 
 
 class ServingEngine(ExecutionCore):

@@ -42,6 +42,36 @@ Seams
     after ``delay_s``.  Models a hung dispatch — the seam the engine's
     watchdog (``PendingResult.result(timeout_s=...)``) exists for.
 
+Silent seams
+------------
+The seams above all trip a PR-6 detector: an exception, a NaN, or a
+watchdog timeout.  The three **silent** seams below produce *finite,
+shaped, wrong* answers — the failure mode a Level-1 trigger fears most,
+because ``health()`` keeps reading ``healthy`` while physics is being
+misclassified.  They exist to prove that gap (no PR-6 detector fires)
+and to prove the sentinel (:mod:`repro.serving.sentinel`) closes it.
+All three fire at the compile-cache BUILD seam: corruption lands in the
+cached callable, persists across dispatches (like a corrupted weight in
+HBM or a poisoned cache entry), and is only cleared by rebuilding the
+entry (``ExecutionCore.evict`` — which is exactly what the sentinel's
+quarantine does).
+
+``scale_drift``
+    Multiplies every int8 quantization scale (``"w_scale"`` leaf) by
+    ``factor`` before the bucket's callable is built.  Models a drifted
+    or corrupted dequantization scale: logits come back finite and
+    plausibly shaped, just wrong.  A no-op on paths without quantized
+    params (nothing to drift — the fault does not fire).
+``weight_corrupt``
+    Corrupts the first weight tensor (``"w"`` leaf): sign-flipped for
+    integer (quantized) tensors, scaled by ``factor`` for floats.
+    Models an SEU/HBM bit-flip class corruption of a cached param.
+``stale_cache``
+    Wraps the freshly built callable in :class:`StaleCacheFn`, which
+    returns the PREVIOUS dispatch's output for every call after the
+    first.  Models a stale/aliased compile-cache entry: answers are
+    real logits — for somebody else's events.
+
 Every firing is appended to :attr:`FaultInjector.log` as
 ``(seam, path, bucket)`` so tests can assert exactly which seams fired.
 """
@@ -54,8 +84,15 @@ import time
 
 import numpy as np
 
-SEAMS = ("compile", "dispatch", "input_nan", "output_nan", "latency",
-         "stuck")
+#: Seams whose firing trips a PR-6 detector (exception / NaN / timeout).
+LOUD_SEAMS = ("compile", "dispatch", "input_nan", "output_nan", "latency",
+              "stuck")
+
+#: Seams that produce finite wrong answers no PR-6 detector sees — the
+#: sentinel's coverage target.  All fire at the compile-cache build.
+SILENT_SEAMS = ("scale_drift", "weight_corrupt", "stale_cache")
+
+SEAMS = LOUD_SEAMS + SILENT_SEAMS
 
 
 class InjectedFault(RuntimeError):
@@ -87,6 +124,7 @@ class Fault:
     bucket: int | None = None
     times: float = math.inf
     delay_s: float = 0.0
+    factor: float = 2.0          # corruption magnitude (silent seams)
     fired: int = 0
 
     def __post_init__(self):
@@ -101,6 +139,85 @@ class Fault:
         return (self.armed and self.seam == seam
                 and (self.path is None or self.path == path)
                 and (self.bucket is None or self.bucket == bucket))
+
+
+def drift_scales(params, factor: float):
+    """``scale_drift``: every ``"w_scale"`` leaf multiplied by ``factor``.
+
+    Returns the corrupted pytree copy, or ``params`` UNCHANGED (same
+    object) when there is nothing to drift — the caller uses identity to
+    decide whether the fault actually applies to this workload.
+    """
+    hits = [0]
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k == "w_scale":
+                    out[k] = v * factor
+                    hits[0] += 1
+                else:
+                    out[k] = walk(v)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    corrupted = walk(params)
+    return corrupted if hits[0] else params
+
+
+def corrupt_weight(params, factor: float):
+    """``weight_corrupt``: the first ``"w"`` tensor, silently wrong.
+
+    Integer (quantized) tensors are sign-flipped — dtype-preserving, so
+    the int8 kernel contract still holds and nothing raises; float
+    tensors are scaled by ``factor``.  Returns ``params`` unchanged
+    (same object) when no weight leaf exists.
+    """
+    hit = [False]
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k == "w" and not hit[0]:
+                    hit[0] = True
+                    out[k] = -v if np.issubdtype(
+                        np.dtype(v.dtype), np.integer) else v * factor
+                else:
+                    out[k] = walk(v)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    corrupted = walk(params)
+    return corrupted if hit[0] else params
+
+
+class StaleCacheFn:
+    """``stale_cache``: a compiled callable serving yesterday's answers.
+
+    The first call passes through (nothing stale exists yet); every call
+    after returns the PREVIOUS call's output while quietly computing and
+    retaining the current one.  All calls to one cache entry share a
+    padded bucket shape, so the swap is shape-safe — the caller receives
+    real, finite logits that belong to somebody else's events.
+    """
+
+    def __init__(self, fn):
+        self._fn = fn
+        self._last = None
+
+    def __call__(self, x):
+        cur = self._fn(x)
+        if self._last is None:
+            self._last = cur
+            return cur
+        out, self._last = self._last, cur
+        return out
 
 
 class StuckBuffer:
@@ -161,9 +278,9 @@ class FaultInjector:
 
     def arm(self, seam: str, *, path: str | None = None,
             bucket: int | None = None, times: float = math.inf,
-            delay_s: float = 0.0) -> Fault:
+            delay_s: float = 0.0, factor: float = 2.0) -> Fault:
         fault = Fault(seam=seam, path=path, bucket=bucket, times=times,
-                      delay_s=delay_s)
+                      delay_s=delay_s, factor=factor)
         self.faults.append(fault)
         return fault
 
@@ -192,6 +309,39 @@ class FaultInjector:
         """``compile`` / ``dispatch`` seam: raise when a fault fires."""
         if self._fire(seam, path, bucket) is not None:
             raise InjectedFault(seam, path=path, bucket=bucket)
+
+    def corrupt_build(self, workload, bucket):
+        """``scale_drift`` / ``weight_corrupt`` seams, consulted by
+        ``ExecutionCore.compiled_for`` on a cache MISS.
+
+        When an armed silent fault matches and the workload can actually
+        be corrupted that way (it exposes a ``corrupted(seam, factor)``
+        hook returning a poisoned twin callable, and the corruption
+        found something to bite), returns the corrupted compiled
+        callable; otherwise ``None`` and the build proceeds normally.
+        A fault that does not apply (e.g. ``scale_drift`` on an fp32
+        path) neither fires nor burns budget.
+        """
+        path = getattr(workload, "name", None)
+        hook = getattr(workload, "corrupted", None)
+        if hook is None:
+            return None
+        for seam in ("scale_drift", "weight_corrupt"):
+            for f in self.faults:
+                if f.matches(seam, path, bucket):
+                    fn = hook(seam, f.factor, bucket)
+                    if fn is not None:
+                        f.fired += 1
+                        self.log.append((seam, path, bucket))
+                        return fn
+        return None
+
+    def wrap_stale(self, fn, *, path=None, bucket=None):
+        """``stale_cache`` seam: wrap a freshly built cache entry in
+        :class:`StaleCacheFn` (previous dispatch's output) when armed."""
+        if self._fire("stale_cache", path, bucket) is not None:
+            return StaleCacheFn(fn)
+        return fn
 
     def corrupt_input(self, x, *, path=None, bucket=None):
         """``input_nan`` seam: NaN the first event of the chunk."""

@@ -23,12 +23,18 @@ numbers the same way:
   the monotonic counters; each gauge also remembers its high-water mark
   (``<name>_max``), which is what backlog tests and capacity planning
   actually read.
+* counter and gauge mutation is LOCKED: the sentinel's shadow worker
+  (:mod:`repro.serving.sentinel`) increments from its own thread while
+  the serve thread records batches — ``Counter.__iadd__`` is a
+  read-modify-write, and a lost ``shadow_disagreements`` increment is a
+  lost corruption signal.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 
 import numpy as np
 
@@ -63,14 +69,18 @@ class ServingMetrics:
         self._counters: collections.Counter[str] = collections.Counter()
         self._gauges: dict[str, float] = {}
         self._gauge_peaks: dict[str, float] = {}
+        self._lock = threading.Lock()
 
     def record_batch(self, latency_s: float, events: int, bucket: int) -> None:
         self._records.append(BatchRecord(latency_s, events, bucket))
 
     def incr(self, name: str, n: int = 1) -> None:
         """Bump a monotonic named counter (shed / demotion / timeout /
-        ... — the fault-tolerance layer's accounting surface)."""
-        self._counters[name] += n
+        ... — the fault-tolerance layer's accounting surface).
+        Thread-safe: shadow-verification threads increment concurrently
+        with the serve thread."""
+        with self._lock:
+            self._counters[name] += n
 
     def counter(self, name: str) -> int:
         return self._counters[name]
@@ -85,10 +95,11 @@ class ServingMetrics:
         slots, ...).  Unlike :meth:`incr` the value REPLACES the previous
         one; the high-water mark is tracked alongside as ``<name>_max``."""
         value = float(value)
-        self._gauges[name] = value
-        peak = self._gauge_peaks.get(name)
-        if peak is None or value > peak:
-            self._gauge_peaks[name] = value
+        with self._lock:
+            self._gauges[name] = value
+            peak = self._gauge_peaks.get(name)
+            if peak is None or value > peak:
+                self._gauge_peaks[name] = value
 
     def gauge_value(self, name: str, default: float = 0.0) -> float:
         return self._gauges.get(name, default)

@@ -33,10 +33,17 @@ raises:
 * **watchdog** — realization polls readiness with a ``watchdog_s``
   budget instead of blocking forever on a stuck dispatch; a timeout
   demotes the rung and re-serves on the fallback.
-* **health state machine** — ``healthy / degraded / shedding / down``
-  with per-bucket detail (:meth:`health`), driven by the shared
-  :class:`~repro.serving.metrics.ServingMetrics` counters; surfaced by
-  ``trigger_serve --health``.
+* **health state machine** — ``healthy / degraded / shedding /
+  quarantined / down`` with per-bucket detail (:meth:`health`), driven
+  by the shared :class:`~repro.serving.metrics.ServingMetrics`
+  counters; surfaced by ``trigger_serve --health``.
+* **silent-corruption sentinel** (opt-in via ``sentinel=``) — the loud
+  ladder above never sees *finite wrong answers*; a
+  :class:`~repro.serving.sentinel.Sentinel` adds golden canaries,
+  duty-cycled shadow re-execution on the terminal rung, and
+  canary-gated quarantine (``promote_after`` consecutive clean
+  canaries to re-promote, instead of one live probe).  See
+  :mod:`repro.serving.sentinel`.
 
 Every transition is deterministic and injectable
 (:mod:`repro.serving.faults`), so the whole ladder is unit-testable on
@@ -53,10 +60,13 @@ from repro.core import paths as forward_paths
 from repro.serving.engine import ServingEngine, WatchdogTimeout
 from repro.serving.faults import InjectedFault
 from repro.serving.metrics import ServingMetrics
+from repro.serving.sentinel import Sentinel, SentinelConfig
 
 #: Health states, worst wins: any bucket with its whole ladder failing
-#: is ``down``; recent shedding beats mere degradation.
-HEALTH_STATES = ("healthy", "degraded", "shedding", "down")
+#: is ``down``; a sentinel quarantine (silent corruption caught, rung
+#: awaiting canary requalification) beats recent shedding, which beats
+#: mere degradation.
+HEALTH_STATES = ("healthy", "degraded", "shedding", "quarantined", "down")
 
 
 class NonFiniteOutput(RuntimeError):
@@ -66,7 +76,8 @@ class NonFiniteOutput(RuntimeError):
 class _BucketState:
     """Ladder position + probe schedule for one compile bucket."""
 
-    __slots__ = ("level", "backoff_s", "next_probe", "demotions", "down")
+    __slots__ = ("level", "backoff_s", "next_probe", "demotions", "down",
+                 "quarantined", "q_level", "clean")
 
     def __init__(self, level: int, backoff_s: float):
         self.level = level           # active chain index (0 = primary)
@@ -74,6 +85,9 @@ class _BucketState:
         self.next_probe: float | None = None   # absolute clock time
         self.demotions = 0
         self.down = False            # last serve exhausted the ladder
+        self.quarantined = False     # sentinel caught silent corruption
+        self.q_level: int | None = None   # the quarantined rung
+        self.clean = 0               # consecutive clean canaries at q_level
 
 
 class ResilientPending:
@@ -149,7 +163,8 @@ class ResilientEngine:
                  metrics: ServingMetrics | None = None, injector=None,
                  watchdog_s: float | None = 30.0, max_inflight: int = 8,
                  probe_initial_s: float = 0.25, probe_max_s: float = 60.0,
-                 shed_window_s: float = 5.0, clock=time.monotonic):
+                 shed_window_s: float = 5.0, clock=time.monotonic,
+                 sentinel: SentinelConfig | bool | None = None):
         self.chain = forward_paths.fallback_chain(forward)
         self.cfg = cfg
         self.forward = forward
@@ -199,6 +214,10 @@ class ResilientEngine:
         self._base_level = base
         self.bucket_sizes = self._engines[base].bucket_sizes
         self._state: dict[int, _BucketState] = {}
+        if sentinel is True:
+            sentinel = SentinelConfig()
+        self.sentinel = (Sentinel(self, sentinel, clock=clock)
+                         if sentinel else None)
 
     # -- introspection -------------------------------------------------------
 
@@ -239,10 +258,13 @@ class ResilientEngine:
         """The health state machine's current view.
 
         ``state`` is the worst of: ``down`` (some bucket's whole ladder
-        failed on its last serve), ``shedding`` (deadline sheds within
-        the last ``shed_window_s``), ``degraded`` (some bucket serving
-        off a fallback rung), ``healthy``.  ``buckets`` carries the
-        per-bucket detail the fleet's load balancer would key on.
+        failed on its last serve), ``quarantined`` (the sentinel caught
+        silent corruption on some bucket's rung; it re-promotes only
+        after ``promote_after`` clean canaries), ``shedding`` (deadline
+        sheds within the last ``shed_window_s``), ``degraded`` (some
+        bucket serving off a fallback rung), ``healthy``.  ``buckets``
+        carries the per-bucket detail the fleet's load balancer would
+        key on.
         """
         now = self._clock()
         buckets = {}
@@ -253,6 +275,10 @@ class ResilientEngine:
                 "level": st.level,
                 "demotions": st.demotions,
                 "down": st.down,
+                "quarantined": st.quarantined,
+                "quarantined_path": (None if st.q_level is None
+                                     else self.chain[st.q_level]),
+                "clean_canaries": st.clean,
                 "next_probe_in_s": (
                     None if st.next_probe is None
                     else max(0.0, st.next_probe - now)),
@@ -261,6 +287,8 @@ class ResilientEngine:
                   and now - self._last_shed < self.shed_window_s)
         if any(st.down for st in self._state.values()):
             state = "down"
+        elif any(st.quarantined for st in self._state.values()):
+            state = "quarantined"
         elif recent:
             state = "shedding"
         elif any(st.level > self._base_level
@@ -268,11 +296,14 @@ class ResilientEngine:
             state = "degraded"
         else:
             state = "healthy"
-        return {"state": state, "chain": list(self.chain),
-                "base_path": self.chain[self._base_level],
-                "buckets": buckets, "inflight": len(self._inflight),
-                "counters": self.metrics.counters,
-                "gauges": self.metrics.gauges}
+        report = {"state": state, "chain": list(self.chain),
+                  "base_path": self.chain[self._base_level],
+                  "buckets": buckets, "inflight": len(self._inflight),
+                  "counters": self.metrics.counters,
+                  "gauges": self.metrics.gauges}
+        if self.sentinel is not None:
+            report["sentinel"] = self.sentinel.detail()
+        return report
 
     # -- rung management -----------------------------------------------------
 
@@ -306,12 +337,54 @@ class ResilientEngine:
 
     def _start_level(self, st: _BucketState, now: float) -> tuple[int, bool]:
         """Where this serve enters the ladder: the active rung, or the
-        ladder top when the bucket's re-promotion probe is due."""
+        ladder top when the bucket's re-promotion probe is due.
+        Quarantined buckets never probe on live traffic — a rung that
+        served silent corruption can LOOK healthy to a probe, so
+        requalification is gated on clean canaries instead."""
+        if st.quarantined:
+            return st.level, False
         if (st.level > self._base_level and st.next_probe is not None
                 and now >= st.next_probe):
             self.metrics.incr("probes")
             return self._base_level, True
         return st.level, False
+
+    def _quarantine(self, bucket: int, level: int) -> None:
+        """Sentinel trip on ``level``: evict the poisoned compile-cache
+        entry (build-time corruption lives in the cached callable),
+        demote the bucket below the rung, and gate re-promotion on
+        clean canaries rather than live probes."""
+        st = self._bucket_state(bucket)
+        eng = self._engines.get(level)
+        if eng is not None:
+            eng.evict(bucket)
+        self.metrics.incr("sentinel_trips")
+        if not (st.quarantined and st.q_level == level):
+            st.quarantined = True
+            st.q_level = level
+            self.metrics.incr("quarantines")
+        st.clean = 0
+        demote_to = min(level + 1, len(self.chain) - 1)
+        if demote_to > st.level:
+            st.level = demote_to
+            st.demotions += 1
+            self.metrics.incr("demotions")
+        st.next_probe = None     # canary-gated, not probe-gated
+
+    def _requalify(self, bucket: int) -> None:
+        """``promote_after`` consecutive clean canaries at the
+        quarantined rung: lift the quarantine and re-promote to it."""
+        st = self._bucket_state(bucket)
+        lvl = st.q_level
+        st.quarantined = False
+        st.q_level = None
+        st.clean = 0
+        if lvl is not None and lvl < st.level:
+            st.level = lvl
+            self.metrics.incr("promotions")
+        st.backoff_s = self.probe_initial_s
+        st.next_probe = None
+        self.metrics.incr("requalifications")
 
     def _count_failure(self, exc: Exception) -> None:
         if isinstance(exc, InjectedFault) and exc.seam == "compile":
@@ -388,6 +461,10 @@ class ResilientEngine:
                 lvl += 1
                 continue
             self._rung_served(st, lvl)
+            if record and self.sentinel is not None:
+                # canaries ride the RUNG engines directly, so the
+                # sentinel never re-enters this ladder
+                self.sentinel.observe(x, out, bucket, lvl)
             return out
         st.down = True
         return self._last_resort(x.shape[0])
@@ -479,6 +556,8 @@ class ResilientEngine:
             out = self._serve_ladder(x, record=record, start=level + 1)
         else:
             self._rung_served(st, level)
+            if record and self.sentinel is not None:
+                self.sentinel.observe(x, out, bucket, level)
         if rp in self._inflight:
             self._inflight.remove(rp)
             self._gauge_inflight()
@@ -534,6 +613,9 @@ class ResilientEngine:
                 lvl += 1
                 continue
             self._rung_served(st, lvl)
+            if self.sentinel is not None:
+                # post-hoc: the hot stream loop itself stays untouched
+                self.sentinel.verify_stream(stream, bucket, lvl)
             return res
         st.down = True
         self.metrics.incr("failed_requests")

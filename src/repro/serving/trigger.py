@@ -27,8 +27,9 @@ import numpy as np
 from repro.core import paths
 from repro.core.interaction_net import JediNetConfig, init
 from repro.data.jets import make_jets
-from repro.serving.faults import FaultInjector
+from repro.serving.faults import SILENT_SEAMS, FaultInjector
 from repro.serving.resilient import ResilientEngine
+from repro.serving.sentinel import SentinelConfig
 
 
 def make_stream(rng, n_batches: int, batch: int, n_objects: int,
@@ -48,9 +49,18 @@ def print_health(engine) -> None:
     for bucket, st in h["buckets"].items():
         probe = ("-" if st["next_probe_in_s"] is None
                  else f"{st['next_probe_in_s']:.2f}s")
+        quarantine = ""
+        if st.get("quarantined"):
+            quarantine = (f" QUARANTINED[{st['quarantined_path']}] "
+                          f"clean_canaries={st['clean_canaries']}")
         print(f"  bucket {bucket:>5}: path={st['path']} level={st['level']} "
               f"demotions={st['demotions']} next_probe_in={probe}"
-              f"{' DOWN' if st['down'] else ''}")
+              f"{quarantine}{' DOWN' if st['down'] else ''}")
+    if h.get("sentinel"):
+        s = h["sentinel"]
+        print(f"  sentinel: canary_every={s['canary_every']} "
+              f"shadow_rate={s['shadow_rate']:g} "
+              f"promote_after={s['promote_after']}")
     if h["counters"]:
         print("  counters: " + " ".join(f"{k}={v}"
                                         for k, v in h["counters"].items()))
@@ -62,12 +72,21 @@ def print_health(engine) -> None:
 
 
 def parse_drills(specs, injector, path) -> None:
-    """Arm ``SEAM[:TIMES[:DELAY_S]]`` drill specs against ``path``."""
+    """Arm ``SEAM[:TIMES[:MAGNITUDE]]`` drill specs against ``path``.
+
+    The third field is seam-dependent: a delay in seconds for the timed
+    loud seams (``latency``, ``stuck``), a corruption factor for the
+    silent seams (``scale_drift``, ``weight_corrupt``)."""
     for spec in specs:
         parts = spec.split(":")
+        seam = parts[0]
         times = float(parts[1]) if len(parts) > 1 else 1.0
-        delay = float(parts[2]) if len(parts) > 2 else 0.05
-        injector.arm(parts[0], path=path, times=times, delay_s=delay)
+        if seam in SILENT_SEAMS:
+            factor = float(parts[2]) if len(parts) > 2 else 4.0
+            injector.arm(seam, path=path, times=times, factor=factor)
+        else:
+            delay = float(parts[2]) if len(parts) > 2 else 0.05
+            injector.arm(seam, path=path, times=times, delay_s=delay)
 
 
 def build_trigger_cli(ap) -> None:
@@ -89,11 +108,24 @@ def build_trigger_cli(ap) -> None:
     ap.add_argument("--health", action="store_true",
                     help="print the engine health report after the run")
     ap.add_argument("--drill", action="append", default=None,
-                    metavar="SEAM[:TIMES[:DELAY_S]]",
-                    help="arm a fault against the primary path (repeatable; "
-                         "seams: compile, dispatch, input_nan, output_nan, "
-                         "latency, stuck) and serve through the guarded "
-                         "per-request path")
+                    metavar="SEAM[:TIMES[:MAGNITUDE]]",
+                    help="arm a fault against the primary path (repeatable) "
+                         "and serve through the guarded per-request path. "
+                         "Loud seams: compile, dispatch, input_nan, "
+                         "output_nan, latency, stuck (MAGNITUDE = delay "
+                         "seconds).  Silent seams: scale_drift, "
+                         "weight_corrupt, stale_cache (MAGNITUDE = "
+                         "corruption factor) — pair them with --sentinel "
+                         "or they serve wrong answers undetected")
+    ap.add_argument("--sentinel", action="store_true",
+                    help="arm the silent-corruption sentinel: golden "
+                         "canaries, terminal-rung shadow re-execution, "
+                         "canary-gated quarantine (see --health)")
+    ap.add_argument("--shadow-rate", type=float, default=1 / 16,
+                    help="sentinel shadow re-execution duty cycle "
+                         "(fraction of live requests; 0 disables shadows)")
+    ap.add_argument("--canary-every", type=int, default=16,
+                    help="sentinel canary cadence in requests per bucket")
     ap.add_argument("--watchdog-s", type=float, default=30.0,
                     help="stuck-dispatch watchdog budget")
     ap.add_argument("--deadline-ms", type=float, default=None,
@@ -124,11 +156,19 @@ def run_trigger_cli(args) -> None:
     if args.drill:
         injector = FaultInjector()
         parse_drills(args.drill, injector, args.forward)
+    sentinel = None
+    if getattr(args, "sentinel", False):
+        # sync shadows: the CLI's verdict (quarantines= in --health)
+        # must be complete when the run prints, not racing a worker
+        sentinel = SentinelConfig(canary_every=args.canary_every,
+                                  shadow_rate=args.shadow_rate,
+                                  shadow_sync=True)
     engine = ResilientEngine(params, cfg, forward=args.forward,
                              interpret=args.interpret or None,
                              max_batch=max(args.batch, 1),
                              injector=injector,
-                             watchdog_s=args.watchdog_s)
+                             watchdog_s=args.watchdog_s,
+                             sentinel=sentinel)
 
     rng = np.random.RandomState(args.seed)
     stream = make_stream(rng, args.batches, args.batch, args.n_objects,

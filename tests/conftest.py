@@ -11,6 +11,11 @@ def pytest_configure(config):
         "markers",
         "chaos: fault-injection suite for the resilient serving layer "
         "(runs in tier-1 AND standalone in CI's chaos job via -m chaos)")
+    config.addinivalue_line(
+        "markers",
+        "sentinel: silent-corruption sentinel suite (canaries, shadow "
+        "re-execution, canary-gated quarantine); runs in tier-1 AND in "
+        "CI's chaos job via -m 'chaos or sentinel'")
 
 
 @pytest.fixture

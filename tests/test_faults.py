@@ -461,3 +461,82 @@ def test_drill_cli_serves_and_reports_health(capsys):
     assert "DRILL" in out and "served=4" in out and "shed=0" in out
     assert "[health]" in out and "state=degraded" in out
     assert "demotions=1" in out and "nonfinite_batches=" in out
+
+
+# -- silent seams: the gap, and the sentinel closing it ------------------
+
+
+def test_silent_seams_invisible_without_sentinel(jedi8):
+    """The gap proof: every silent seam strikes (finite, shaped, WRONG
+    logits — deviation orders of magnitude past tolerance) yet no PR-6
+    detector fires and ``health()`` keeps reading ``healthy``.  This is
+    the blind spot :mod:`repro.serving.sentinel` exists for."""
+    cfg, params, _, _ = jedi8
+    rotation = list(zip(("scale_drift", "weight_corrupt", "stale_cache"),
+                        (8, 16, 32)))
+    inj = FaultInjector()
+    for seam, bucket in rotation:
+        inj.arm(seam, path="int8_fused_full", bucket=bucket, factor=8.0)
+    eng = _engine(jedi8, inj, forward="int8_fused_full", max_batch=64)
+    rng = np.random.RandomState(7)
+    worst = 0.0
+    for seam, bucket in rotation:
+        for _ in range(4):                   # vary inputs: a stale-cache
+            n = bucket - 3                   # replay is observably wrong
+            x = rng.normal(0, 1, (n, 8, 16)).astype(np.float32)
+            out = eng.infer(x)               # never raises
+            assert out.shape == (n, cfg.n_targets)
+            assert np.isfinite(out).all()
+            ref = np.asarray(forward_sr(params, cfg, x))
+            worst = max(worst, float(np.abs(out - ref).max()))
+    assert worst > 1.0                       # the corruption is real...
+    assert inj.fired() == 3                  # ...and every seam struck
+    h = eng.health()
+    assert h["state"] == "healthy"           # ...and the ladder is blind
+    for k in ("compile_failures", "watchdog_timeouts", "nonfinite_batches",
+              "dispatch_failures", "demotions", "quarantines"):
+        assert k not in h["counters"], k
+
+
+def test_rotating_silent_seams_detected_quarantined_recovered(jedi8):
+    """The acceptance loop: the same rotation WITH the sentinel armed.
+    Every silent seam is detected (first canary — one observed batch),
+    quarantined, and recovered via clean-canary requalification, with
+    zero exceptions and never a ``healthy`` report while the corrupted
+    entry could serve."""
+    from repro.serving import SentinelConfig
+
+    cfg, params, _, _ = jedi8
+    rotation = list(zip(("scale_drift", "weight_corrupt", "stale_cache"),
+                        (8, 16, 32)))
+    inj = FaultInjector()
+    for seam, bucket in rotation:
+        inj.arm(seam, path="int8_fused_full", bucket=bucket, times=1,
+                factor=8.0)
+    eng = _engine(jedi8, inj, forward="int8_fused_full", max_batch=64,
+                  sentinel=SentinelConfig(canary_every=3, promote_after=2,
+                                          shadow_rate=0.25,
+                                          shadow_sync=True))
+    rng = np.random.RandomState(11)
+    for seam, bucket in rotation:
+        n = bucket - 3
+        states = []
+        for _ in range(14):      # bounded: detect @1, requalify @~7
+            x = rng.normal(0, 1, (n, 8, 16)).astype(np.float32)
+            served_by = eng.active_path(bucket)   # pre-serve: quarantine
+            out = eng.infer(x)               # never raises    # trips AFTER
+            assert np.isfinite(out).all()
+            if served_by != "int8_fused_full":
+                # quarantined: the fp32 fallback serves CORRECT answers
+                ref = np.asarray(forward_sr(params, cfg, x))
+                assert np.abs(out - ref).max() < 1e-3
+            states.append(eng.health()["state"])
+        assert states[0] == "quarantined", seam      # 1-batch detection
+        assert states[-1] == "healthy", seam         # ...and recovered
+        first_ok = states.index("healthy")
+        assert all(s == "quarantined" for s in states[:first_ok]), seam
+    c = eng.metrics.counters
+    assert c["quarantines"] == 3 and c["requalifications"] == 3
+    assert c["sentinel_trips"] == 3 and c["canary_mismatches"] == 3
+    assert inj.fired() == 3
+    assert eng.health()["state"] == "healthy"

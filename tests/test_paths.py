@@ -352,6 +352,22 @@ def test_loss_fn_resolves_registry_paths(jedi):
         assert 0.0 <= float(aux["accuracy"]) <= 1.0
 
 
+def test_loss_fn_warns_on_quantized_path(jedi):
+    """Training through a quantized path silently kills gradients (the
+    round has no straight-through estimator) — loss_fn must SAY so,
+    naming the path and pointing at the ROADMAP QAT item, and stay
+    quiet on fp32 paths."""
+    import warnings
+
+    cfg, params, x = jedi
+    batch = {"x": x, "y": jnp.zeros((x.shape[0],), jnp.int32)}
+    with pytest.warns(UserWarning, match="int8_fused_full.*MXU pipeline"):
+        inet.loss_fn(params, cfg, batch, forward="int8_fused_full")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # fp32 path: no warning
+        inet.loss_fn(params, cfg, batch, forward="sr")
+
+
 # -- async engine dispatch ----------------------------------------------
 
 
@@ -610,3 +626,46 @@ def test_check_regression_corrupt_baseline_warns_and_fails(tmp_path,
     out = capsys.readouterr().out
     assert rc == 1
     assert "not valid JSON" in out and "benchmarks.run" in out
+
+
+def test_check_regression_warns_on_calibration_mismatch(tmp_path, capsys):
+    """Calibration stamps >1.5x apart mean the two payloads were NOT
+    measured in the same quiet window — the gate still runs (the
+    yardstick normalizes), but it must warn LOUDLY with the regenerate
+    recipe rather than quietly leaning on the normalization."""
+    check_regression = pytest.importorskip("benchmarks.check_regression")
+    fresh_dir, base_dir = tmp_path / "fresh", tmp_path / "base"
+    fresh_dir.mkdir(), base_dir.mkdir()
+    (base_dir / "BENCH_fused.json").write_text(json.dumps(
+        _fused_doc({"sr": {"wall_us": 100.0}}, calibration=100.0)))
+    (fresh_dir / "BENCH_fused.json").write_text(json.dumps(
+        _fused_doc({"sr": {"wall_us": 250.0}}, calibration=250.0)))
+    for d in (base_dir, fresh_dir):
+        (d / "BENCH_serving.json").write_text(json.dumps(
+            {"schema": 1, "backend": "cpu", "configs": {}}))
+    rc = check_regression.main(["--fresh-dir", str(fresh_dir),
+                                "--baseline-dir", str(base_dir)])
+    out = capsys.readouterr().out
+    assert rc == 0                    # normalized 250/2.5 = 100: no regress
+    assert "WARN: calibration stamps differ by 2.50x" in out
+    assert "SAME QUIET WINDOW" in out
+
+
+def test_check_regression_quiet_when_calibration_close(tmp_path, capsys):
+    """Stamps within 1.5x: no banner — the warning must stay a signal,
+    not ambient noise on every healthy run."""
+    check_regression = pytest.importorskip("benchmarks.check_regression")
+    fresh_dir, base_dir = tmp_path / "fresh", tmp_path / "base"
+    fresh_dir.mkdir(), base_dir.mkdir()
+    (base_dir / "BENCH_fused.json").write_text(json.dumps(
+        _fused_doc({"sr": {"wall_us": 100.0}}, calibration=100.0)))
+    (fresh_dir / "BENCH_fused.json").write_text(json.dumps(
+        _fused_doc({"sr": {"wall_us": 120.0}}, calibration=120.0)))
+    for d in (base_dir, fresh_dir):
+        (d / "BENCH_serving.json").write_text(json.dumps(
+            {"schema": 1, "backend": "cpu", "configs": {}}))
+    rc = check_regression.main(["--fresh-dir", str(fresh_dir),
+                                "--baseline-dir", str(base_dir)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "SAME QUIET WINDOW" not in out
